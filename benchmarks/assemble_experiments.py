@@ -1,0 +1,210 @@
+"""Assemble EXPERIMENTS.md: generated §Dry-run/§Roofline + static §Perf /
+§Paper-validation narrative (the measured hillclimb log)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.report import dryrun_section, roofline_section
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+HEADER = """# EXPERIMENTS
+
+Regenerate the generated sections with
+`PYTHONPATH=src:. python -m benchmarks.assemble_experiments` after
+`python -m repro.launch.dryrun --all --both-meshes`.
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s ICI per
+link.  All per-chip quantities come from the trip-count-aware SPMD-HLO
+analyzer (`repro.launch.hlo_analysis`) — see the caveats note at the end.
+"""
+
+
+def perf_table(target, legs):
+    rows = ["| variant | flags | compute | memory | collective | peak HBM |",
+            "|---|---|---|---|---|---|"]
+    for tag, flags in legs:
+        path = os.path.join(ROOT, "experiments/perf",
+                            f"{target}__{tag}.json")
+        if not os.path.exists(path):
+            rows.append(f"| {tag} | {flags} | (missing) | | | |")
+            continue
+        r = json.load(open(path))
+        h, c = r["hlo"], r["collectives"]
+        peak = r["memory"].get("peak_memory_in_bytes", 0) / 1e9
+        rows.append(
+            f"| {tag} | `{flags}` | {h['flops']/197e12:.3g}s "
+            f"| {h['bytes']/819e9:.3g}s | {c['total_bytes']/50e9:.3g}s "
+            f"| {peak:.2f}GB{' **>16GB**' if peak > 16 else ''} |")
+    return "\n".join(rows)
+
+
+PERF_INTRO = """## §Perf — hillclimb log (three pairs)
+
+Pairs chosen per the brief's rule from the baseline roofline table:
+
+* **Target B — deepseek-v3-671b x train_4k**: worst roofline state (peak
+  HBM/chip exceeds the 16GB of a v5e: the combo does not fit).
+* **Target A — internvl2-1b x prefill_32k**: most collective-bound
+  (collective term > memory > 300x compute at baseline).
+* **Target C — qwen3-4b x decode_32k**: most representative of the paper's
+  technique (KV-cache autoregressive decode — pillar P1's home turf).
+
+Method: hypothesis -> napkin math -> change (env-gated perf flag) ->
+re-lower -> re-analyze -> confirm/refute.  Baselines are paper-faithful
+(`REPRO_PERF_OPTS=""`); artifacts in `experiments/perf/`.
+"""
+
+TARGET_B = """### Target B: deepseek-v3-671b / train_4k (fit the pod)
+
+Baseline state: full-AdamW training of 671B params on 256 x 16GB chips.
+Napkin: fp32 master params (4B) + two bf16 moments (2+2B) = 8B/param
+-> 671e9 x 8 / 256 = **21.0GB/chip** before activations — cannot fit, and
+the dry-run confirms (peak 21.7GB).
+
+| hypothesis | napkin | measured |
+|---|---|---|
+| H-B1: bf16 param storage (DeepSeek itself trained in fp8; bf16 is the conservative TPU analogue) saves 671e9x2/256 = 5.2GB | 21.7 -> 16.5GB | 21.72 -> **16.29GB** — confirmed (still over) |
+| H-B2: Adafactor-style factored second moment + momentum-free saves both bf16 moments (2x5.2GB) minus tiny row/col stats | 16.3 -> ~5.9GB | 16.29 -> **5.47GB** — confirmed, **fits with 2.9x headroom** |
+| H-B3: grad_accum=4 microbatching shrinks activation/logit peaks further | -1-2GB | 5.47 -> 5.47GB, +1% FLOPs, +2% collectives — **refuted** (remat already bounds activations; the binding term was optimizer state) |
+
+"""
+
+TARGET_A = """### Target A: internvl2-1b / prefill_32k (collective wall)
+
+Baseline diagnosis: 1.50TB/chip of collectives (841 all-reduces = ~35 per
+layer — not the 2/layer of healthy Megatron TP).  Root cause: 14 query /
+2 KV heads do not divide the 16-way `model` axis, so GSPMD reshards full
+activations around every per-head reshape.
+
+| hypothesis | napkin | measured |
+|---|---|---|
+| H-A1: attn_bf16 halves fp32 attention traffic | mem -5-10% | bytes 20.8 -> 19.4TB (-7%), collectives unchanged — confirmed, minor |
+| H-A2: tp_attn_guard (replicate attention weights, attention runs data-parallel) removes per-head reshards | coll 30s -> <1s | coll **30.0s -> 0.63s (-48x)** — confirmed; BUT compute 0.073 -> 0.98s and memory 25.4 -> 40.7s (replication over the idle model axis) — **net negative on the max-term estimate** |
+| H-A3: + seq_parallel (shard the 32k sequence over `model` so the replicated compute divides back down) | compute ~1/16 | compute 1.18s, coll 1.06s — **refuted**: the chunked-attention block reshape breaks sequence sharding, GSPMD re-gathers |
+
+Outcome: the collective wall is removable (H-A2) but the fixed 16x16 mesh
+is simply oversized for a 0.9B model at TP=16.  The production answer is
+mesh reconfiguration (DP-heavy submeshes) or a sequence-sharding-preserving
+attention (ring attention) — recorded as the next iteration beyond this
+budget.  Three consecutive <5%-or-negative changes -> stop per protocol.
+
+"""
+
+TARGET_C = """### Target C: qwen3-4b / decode_32k (the paper's own regime)
+
+Baseline: memory-dominant (as expected for batch decode: read 620GB of KV
+cache + 8GB of weights per global step; per chip 3.9GB cache reads).
+
+| hypothesis | napkin | measured |
+|---|---|---|
+| H-C1: attn_bf16 — FasterTransformer computes attention in half precision; the fp32-cast jnp reference materializes an fp32 copy of every cache tile | mem -10-50% | bytes 48.7 -> **43.8GB (-10%)** — confirmed (the residual gap is CPU-HLO double-buffered scan carries; a TPU compile aliases them) |
+| H-C2 (engine, wall-clock): fuse the greedy decode loop into one lax.scan — removes per-token dispatch + host sync | step overhead -> 0 | Table-1 stage 2 went 1.02x -> **1.21x** over baseline on the CPU host (see §Paper-validation) — confirmed |
+| H-C4 (engine, wall-clock): prefix caching — precompute shared-prompt KV once (`engine.set_prefix`) | prefill cost ~ suffix/total | **2.06x** measured serve speedup at 64-token prefix + 8-token suffixes, outputs bit-identical (`examples/prefix_serving.py`) — confirmed |
+| H-C3: analyzer fidelity — in-place scatter/DUS cache writes under donation must be charged the written slice, not the 2.4GB buffer | bytes -5-10x | per-chip bytes 434 -> 48.7GB baseline restatement (analyzer v3; both recorded) — confirmed |
+
+Essential-traffic floor (napkin): 3.9GB cache + 0.5GB weight shard
+= 4.4GB/chip/step = 5.4ms vs measured-model 53ms — the remaining 10x is
+unfused-CPU-HLO artifact, bounded and documented below.
+
+**Promoted defaults** after this pass: `attn_bf16` (paper-faithful:
+FT uses fp16 compute).  `tp_attn_guard`, `seq_parallel`, `bf16_params`,
+`factored_opt`, `grad_accum` stay opt-in per arch/scale.
+
+### Bonus: MoE dispatch backend (qwen3-moe-235b / decode_32k)
+
+Hypothesis: `jax.lax.ragged_dot` grouped matmul (no capacity, no token
+drops, no padded (E,C,d) buffer) beats the GShard capacity einsum.
+Measured (`experiments/perf/...__ragged.json`): it *lowers* on the
+256-chip mesh but GSPMD cannot shard the ragged group dimension over the
+expert axis — per-chip FLOPs 0.09T -> 1.88T (replicated expert compute),
+bytes +33%, collectives +140%.  **Refuted for the distributed setting**:
+ragged dispatch stays the single-host/quality option (exactness tested
+vs the capacity path), the expert-sharded capacity einsum remains the
+production default.
+
+"""
+
+VALIDATION = """## §Paper-validation (Table-1 reproduction)
+
+`python -m benchmarks.table1` (also `examples/serve_batched.py`) runs the
+paper's four cumulative stages on a scaled UNIMO-text over a synthetic
+Zipf workload (the paper's dataset is proprietary).  Paper numbers are
+GPU samples/s; ours are CPU-host samples/s — the deliverable is the
+cumulative structure:
+
+| stage | paper (GPU, full scale) | this repo (CPU host) |
+|---|---|---|
+| baseline | 16.11 (1.0x) | 3.41 (1.0x) |
+| + fast transformer (KV+half+fused) | 98.46 (6.1x) | 4.13 (1.21x) |
+| + embedding pruning | 125.32 (7.8x) | 17.03 (4.99x) |
+| + multi-process pipeline | 144.45 (8.96x) | 16.95 (4.97x) |
+
+Host-effect analysis (DESIGN.md §3): (a) the KV-cache stage's 6.1x on GPU
+collapses to 1.22x on one CPU core because skinny decode GEMMs lose their
+parallel-hardware advantage and bf16 is emulated — the decode_32k roofline
+(Target C) shows the TPU-side win the host cannot; (b) the pipeline stage
+overlaps CPU pre/post-processing with *accelerator* compute; with the model
+on the same single core there is nothing to overlap with (mechanism
+verified by equivalence tests instead).  The pruning stage's win (4.2x
+measured with fp32, 4.99x cumulative with bf16) is host-independent:
+smaller embedding gather + 512->128 padding, exactly the paper's Figure-3
+argument.  Quality preservation is validated structurally: pruning keeps
+kept-token logits bit-identical (test), half-precision logits stay within
+tolerance with >70% greedy-argmax agreement (test).
+"""
+
+CAVEATS = """## Analyzer caveats (applies to all byte numbers)
+
+1. `compiled.cost_analysis()` visits while bodies once; our analyzer
+   multiplies by trip counts (validated against hand-computed scans in
+   `tests/test_hlo_analysis.py`).
+2. Bytes are operand+output per instruction with fusion-parameter usage
+   analysis (sliced reads charged the slice; donated scatter/DUS writes
+   charged the written window; fp32<->bf16 convert chains treated as
+   register traffic).  This is an *upper bound*: XLA-CPU fuses less than
+   XLA-TPU, and scan double-buffering that TPU aliases in place is still
+   counted.  Essential-traffic floors are given in §Perf where relevant.
+3. Collective bytes are output-shape bytes of collective ops (the standard
+   proxy; exact for all-gather, ~1x ring payload for all-reduce).
+4. deepseek/qwen3-moe train shapes use bf16 optimizer moments in the
+   *baseline* dry-run (`LOW_MEM_OPT_THRESHOLD`) — full-fp32 AdamW for 671B
+   params cannot be expressed on 256 chips at all; §Perf Target B treats
+   the remaining gap.
+"""
+
+
+def main():
+    parts = [
+        HEADER,
+        VALIDATION,
+        PERF_INTRO,
+        TARGET_B + perf_table(
+            "deepseek-v3-671b__train_4k__16x16",
+            [("base", ""), ("attnbf16", "attn_bf16"),
+             ("bf16p", "attn_bf16,bf16_params"),
+             ("bf16p_fact", "attn_bf16,bf16_params,factored_opt"),
+             ("bf16p_fact_ga4",
+              "attn_bf16,bf16_params,factored_opt,grad_accum=4")]),
+        TARGET_A + perf_table(
+            "internvl2-1b__prefill_32k__16x16",
+            [("base", ""), ("attnbf16", "attn_bf16"),
+             ("tpguard", "attn_bf16,tp_attn_guard"),
+             ("tpguard_seqpar", "attn_bf16,tp_attn_guard,seq_parallel")]),
+        TARGET_C + perf_table(
+            "qwen3-4b__decode_32k__16x16",
+            [("base", ""), ("attnbf16", "attn_bf16")]),
+        dryrun_section(),
+        roofline_section(),
+        CAVEATS,
+    ]
+    out = "\n\n".join(parts) + "\n"
+    with open(os.path.join(ROOT, "EXPERIMENTS.md"), "w") as f:
+        f.write(out)
+    print(f"EXPERIMENTS.md written ({len(out)} chars)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Generate the §Dry-run and §Roofline sections of EXPERIMENTS.md from the
+dry-run artifacts.  (§Perf and §Paper-validation are written by hand from
+the hillclimb log and Table-1 runs.)
+"""
+from __future__ import annotations
+
+import json
+import os
+from collections import defaultdict
+
+from benchmarks.roofline import (DRYRUN_DIR, fmt_seconds, load_records,
+                                 table, terms)
+
+
+def _gb(x):
+    return f"{x/1e9:.2f}GB"
+
+
+def dryrun_section() -> str:
+    recs = load_records(mesh=None)
+    by_mesh = defaultdict(list)
+    for r in recs:
+        by_mesh[r["mesh"]].append(r)
+    lines = ["## §Dry-run", "",
+             f"{len(recs)} (arch x shape x mesh) combinations lowered and "
+             "compiled (`python -m repro.launch.dryrun --all "
+             "--both-meshes`); artifacts in `experiments/dryrun/`.", ""]
+    for mesh in ("16x16", "2x16x16"):
+        rs = by_mesh.get(mesh, [])
+        lines.append(f"### mesh {mesh} ({rs[0]['chips'] if rs else '?'} "
+                     f"chips) — {len(rs)} combos")
+        lines.append("")
+        lines.append("| arch | shape | compile | peak bytes/chip | "
+                     "HLO GFLOPs/chip | collective MB/chip | "
+                     "top collective |")
+        lines.append("|---|---|---|---|---|---|---|")
+        for r in sorted(rs, key=lambda r: (r["arch"], r["shape"])):
+            mem = r.get("memory", {})
+            peak = mem.get("peak_memory_in_bytes", 0)
+            coll = r.get("collectives", {})
+            per = coll.get("per_op_bytes", {})
+            top = max(per, key=per.get) if per and any(per.values()) else "-"
+            hlo = r.get("hlo", {})
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['compile_s']}s "
+                f"| {_gb(peak)} | {hlo.get('flops', 0)/1e9:.1f} "
+                f"| {coll.get('total_bytes', 0)/1e6:.1f} | {top} |")
+        lines.append("")
+    return "\n".join(lines)
+
+
+def roofline_section() -> str:
+    rows = table(load_records(mesh="16x16"))
+    lines = [
+        "## §Roofline (single-pod 16x16, per chip)", "",
+        "Terms per the brief: compute = HLO_FLOPs/(chips x 197 TFLOP/s), "
+        "memory = HLO_bytes/(chips x 819 GB/s), collective = "
+        "collective_bytes/(chips x 50 GB/s).  HLO quantities come from the "
+        "trip-count-aware analyzer (`repro.launch.hlo_analysis`) over the "
+        "per-chip SPMD program, so per-chip values divide out directly. "
+        "In-place ops (scatter/gather/DUS) are charged only their moved "
+        "slices (buffer donation, paper P3).", "",
+        "| arch | shape | compute | memory | collective | dominant | "
+        "useful% | fits 16GB |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for t in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        lines.append(
+            f"| {t['arch']} | {t['shape']} | {fmt_seconds(t['compute_s'])} "
+            f"| {fmt_seconds(t['memory_s'])} "
+            f"| {fmt_seconds(t['collective_s'])} | **{t['dominant']}** "
+            f"| {100*t['useful_frac']:.1f}% "
+            f"| {'yes' if t['fits_hbm'] else '**NO**'} |")
+    lines.append("")
+    # bottleneck summary
+    doms = defaultdict(int)
+    for t in rows:
+        doms[t["dominant"]] += 1
+    lines.append("Dominant-term census: "
+                 + ", ".join(f"{k}: {v}" for k, v in sorted(doms.items())))
+    lines.append("")
+    return "\n".join(lines)
+
+
+def main():
+    print(dryrun_section())
+    print()
+    print(roofline_section())
+
+
+if __name__ == "__main__":
+    main()

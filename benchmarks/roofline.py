@@ -1,0 +1,111 @@
+"""Roofline analysis from the dry-run artifacts (§Roofline deliverable).
+
+Reads experiments/dryrun/*.json (produced by repro.launch.dryrun), derives
+the three terms per (arch x input-shape x mesh):
+
+  compute    = HLO_FLOPs_per_chip / peak_FLOPs        (197 TFLOP/s bf16)
+  memory     = HLO_bytes_per_chip / HBM_bw            (819 GB/s)
+  collective = collective_bytes_per_chip / link_bw    (50 GB/s ICI)
+
+HLO_FLOPs/bytes come from the trip-count-aware HLO analyzer (per-chip SPMD
+program), so per-chip values are exactly what the formulas need.  Also
+reports MODEL_FLOPS / HLO_FLOPs (useful-compute fraction: catches remat and
+redundant-compute waste) and the dominant term.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..",
+                          "experiments", "dryrun")
+
+
+def load_records(dryrun_dir: str = DRYRUN_DIR,
+                 mesh: Optional[str] = "16x16") -> List[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def terms(rec: dict) -> Optional[dict]:
+    hlo = rec.get("hlo", {})
+    if "flops" not in hlo:
+        return None
+    chips = rec["chips"]
+    compute = hlo["flops"] / PEAK_FLOPS
+    memory = hlo["bytes"] / HBM_BW
+    coll = rec["collectives"]["total_bytes"] / LINK_BW
+    dom = max((compute, "compute"), (memory, "memory"), (coll, "collective"))
+    model_fl = rec["model_flops"]["flops"]
+    hlo_global = hlo["flops"] * chips
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": chips,
+        "compute_s": compute, "memory_s": memory, "collective_s": coll,
+        "dominant": dom[1], "dominant_s": dom[0],
+        "model_flops": model_fl,
+        "hlo_flops_global": hlo_global,
+        "useful_frac": model_fl / hlo_global if hlo_global else 0.0,
+        "peak_bytes_per_chip": rec.get("memory", {}).get(
+            "peak_memory_in_bytes", 0),
+        "fits_hbm": rec.get("memory", {}).get(
+            "peak_memory_in_bytes", 0) < 16e9,
+    }
+
+
+def table(recs: List[dict]) -> List[dict]:
+    out = []
+    for r in recs:
+        t = terms(r)
+        if t:
+            out.append(t)
+    return out
+
+
+def fmt_seconds(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def render_markdown(rows: List[dict]) -> str:
+    hdr = ("| arch | shape | compute | memory | collective | dominant | "
+           "useful% | fits HBM |\n|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for t in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        lines.append(
+            f"| {t['arch']} | {t['shape']} | {fmt_seconds(t['compute_s'])} "
+            f"| {fmt_seconds(t['memory_s'])} "
+            f"| {fmt_seconds(t['collective_s'])} | **{t['dominant']}** "
+            f"| {100*t['useful_frac']:.0f}% "
+            f"| {'y' if t['fits_hbm'] else 'NO'} |")
+    return hdr + "\n".join(lines)
+
+
+def main():
+    rows = table(load_records())
+    print("arch,shape,mesh,compute_s,memory_s,collective_s,dominant,"
+          "useful_frac,fits_hbm")
+    for t in rows:
+        print(f"{t['arch']},{t['shape']},{t['mesh']},{t['compute_s']:.4g},"
+              f"{t['memory_s']:.4g},{t['collective_s']:.4g},{t['dominant']},"
+              f"{t['useful_frac']:.3f},{t['fits_hbm']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Benchmark harness entrypoint: one function per paper table/figure.
+
+  * table1    — the paper's Table 1 (cumulative optimization speedups)
+  * roofline  — §Roofline terms per (arch x shape) from the dry-run
+  * kernels   — hot-path microbenchmarks (CPU reference numbers)
+
+Prints ``name,us_per_call,derived`` style CSV sections.
+"""
+from __future__ import annotations
+
+import traceback
+
+
+def main() -> None:
+    sections = []
+    print("== table1: paper Table-1 cumulative speedups ==")
+    try:
+        from benchmarks import table1
+        sections.append(("table1", table1.main()))
+    except Exception:
+        traceback.print_exc()
+
+    print("\n== kernels: hot-path microbenchmarks ==")
+    try:
+        from benchmarks import kernels_bench
+        sections.append(("kernels", kernels_bench.main()))
+    except Exception:
+        traceback.print_exc()
+
+    print("\n== roofline: per (arch x shape) terms from dry-run ==")
+    try:
+        from benchmarks import roofline
+        rows = roofline.main()
+        if not rows:
+            print("(no dry-run artifacts found — run "
+                  "`python -m repro.launch.dryrun --all` first)")
+        sections.append(("roofline", rows))
+    except Exception:
+        traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

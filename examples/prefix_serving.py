@@ -1,0 +1,54 @@
+"""Prefix caching end to end (beyond-paper; EXPERIMENTS.md §Perf):
+precompute a shared system-prompt's KV/state cache once, then serve many
+requests that only prefill their suffixes.
+
+    PYTHONPATH=src python examples/prefix_serving.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.registry import get_reduced
+from repro.core.engine import InferenceEngine
+from repro.core.precision import FP32
+from repro.models import transformer as T
+
+
+def main():
+    cfg = get_reduced("gemma2-2b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = InferenceEngine(cfg, params, policy=FP32, max_len=160)
+    rng = np.random.default_rng(0)
+
+    system_prompt = [2] + list(rng.integers(4, 400, size=63))   # 64 tokens
+    suffixes = rng.integers(4, 400, size=(4, 8)).astype(np.int32)
+    lens = np.full(4, 8, np.int32)
+
+    # without prefix caching: full prompts every time
+    full = np.concatenate(
+        [np.tile(system_prompt, (4, 1)).astype(np.int32), suffixes], axis=1)
+    flens = np.full(4, full.shape[1], np.int32)
+    eng.generate_batch(full.copy(), flens.copy(), 8)            # warm
+    t0 = time.perf_counter()
+    g_full = eng.generate_batch(full, flens, 8)
+    t_full = time.perf_counter() - t0
+
+    # with prefix caching: the 64-token system prompt is prefilled ONCE
+    eng.set_prefix(system_prompt)
+    eng.generate_batch(suffixes.copy(), lens.copy(), 8)         # warm
+    t0 = time.perf_counter()
+    g_pc = eng.generate_batch(suffixes, lens, 8)
+    t_pc = time.perf_counter() - t0
+
+    assert (g_full == g_pc).all(), "prefix caching must be exact"
+    print(f"full-prompt serve : {t_full*1e3:7.1f} ms "
+          f"(prefill {full.shape[1]} tokens/slot)")
+    print(f"prefix-cached     : {t_pc*1e3:7.1f} ms "
+          f"(prefill {suffixes.shape[1]} tokens/slot)")
+    print(f"outputs identical; speedup {t_full/t_pc:.2f}x — the paper's "
+          f"'extract relevant content offline' applied to KV state")
+
+
+if __name__ == "__main__":
+    main()

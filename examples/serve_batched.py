@@ -1,0 +1,37 @@
+"""End-to-end serving driver (deliverable b): batched requests through the
+full optimized stack, reproducing the paper's Table-1 stage structure.
+
+    PYTHONPATH=src python examples/serve_batched.py [--requests 24]
+
+Delegates to ``benchmarks.table1`` so the example and the benchmark can
+never drift apart.  Host caveats (single CPU core): the pipeline stage's
+overlap gain requires the model stage to run on an accelerator, and bf16
+is emulated — see EXPERIMENTS.md §Paper-validation for the analysis.
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.table1 import run_table1  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--half", default="bf16", choices=["bf16", "fp16",
+                                                       "fp32"])
+    args = ap.parse_args()
+
+    print("paper Table-1 stages (scaled UNIMO-text, synthetic workload):")
+    rows = run_table1(n_requests=args.requests, half=args.half)
+    print(f"  {'stage':28s} {'seconds':>8s} {'req/s':>8s} {'speedup':>8s}")
+    for name, sec, sps, speed in rows:
+        print(f"  {name:28s} {sec:8.2f} {sps:8.2f} {speed:7.2f}x")
+    print(f"\n  cumulative: {rows[-1][3]:.2f}x "
+          f"(paper reports 8.96x on GPU at full scale)")
+
+
+if __name__ == "__main__":
+    main()

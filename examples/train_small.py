@@ -1,0 +1,50 @@
+"""Train a small LM for a few hundred steps (deliverable b, training kind).
+
+    PYTHONPATH=src python examples/train_small.py [--steps 300]
+"""
+import argparse
+
+import jax
+
+from repro.configs.base import LayerSpec, ModelConfig, uniform_stack
+from repro.core.tokenizer import FastTokenizer
+from repro.data.pipeline import packed_batches, synthetic_corpus
+from repro.models import transformer as T
+from repro.training.train_loop import train
+from repro.core.precision import FP32
+from repro.training.optimizer import AdamWConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    args = ap.parse_args()
+
+    # ~qwen3-family shape scaled to the CPU host
+    cfg = ModelConfig(
+        name="tiny-qwen", family="dense", d_model=256, num_heads=8,
+        num_kv_heads=2, head_dim=32, d_ff=768, vocab_size=512,
+        stacks=uniform_stack(4, LayerSpec()), qk_norm=True,
+        activation="swiglu", norm="rmsnorm")
+    corpus = synthetic_corpus(3000)
+    tok = FastTokenizer.train(corpus, cfg.vocab_size)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"{cfg.name}: {n:,} params, {args.steps} steps")
+
+    batches = packed_batches(tok, corpus, batch_size=8, seq_len=64)
+    params, _, hist = train(
+        cfg, params, batches, steps=args.steps, policy=FP32,
+        opt_cfg=AdamWConfig(lr=1e-3, warmup_steps=30,
+                            total_steps=args.steps),
+        log_every=25,
+        callback=lambda i, m: print(
+            f"  step {i:4d}  loss {m['loss']:.4f}  gnorm {m['gnorm']:.2f}"))
+    drop = hist[0]["loss"] - hist[-1]["loss"]
+    print(f"loss: {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f} "
+          f"({drop:.3f} nats learned)")
+    assert drop > 0.3, "training failed to learn"
+
+
+if __name__ == "__main__":
+    main()

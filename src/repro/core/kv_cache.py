@@ -1,0 +1,150 @@
+"""KV / state caches — paper pillar P1 (the K-V cache mechanism, Fig. 2).
+
+The paper caches attention K/V to eliminate recomputation during
+autoregressive decoding.  Here the idea is generalized into a *state cache*
+abstraction covering every assigned architecture family:
+
+  * full attention   -> (B, S_max, H_kv, D) K/V ring-less cache
+  * sliding window   -> (B, W, H_kv, D) ring buffer (bounded memory)
+  * MLA (DeepSeek)   -> compressed latent (B, S_max, kv_rank) + shared rope key
+  * mLSTM / sLSTM    -> O(1) recurrent matrix/scalar memory
+  * hybrid (Hymba)   -> window ring + SSM state + conv state
+
+Every positional cache carries an explicit ``pos`` array (absolute token
+position per cache slot, -1 = empty), which makes attention masks exact for
+ring buffers and padded batches alike.
+
+All update functions are functional (return a new cache pytree); the decode
+step donates the cache buffers (XLA buffer donation = the paper's "memory
+reuse"), so on device the update is in-place.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ATTN, HYBRID, MLA, MLSTM, SLSTM, LayerSpec,
+                                ModelConfig)
+
+# ---------------------------------------------------------------------------
+# Construction
+# ---------------------------------------------------------------------------
+
+
+def layer_cache_shape(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                      max_len: int, dtype) -> dict:
+    """Abstract (ShapeDtypeStruct-friendly) cache for one layer."""
+    hd = cfg.resolved_head_dim
+    window = effective_window(cfg, spec, max_len)
+    # +1 "dump" slot: prefill padding tokens scatter there (marked pos=-1),
+    # so ragged batches never evict live ring entries.  The allocation is
+    # rounded up to a multiple of 256 so the sequence dim shards evenly
+    # over the mesh (ring arithmetic uses shape-1; entries between the
+    # window and the ring age out via the position mask).
+    s = (min(window, max_len) if window else max_len) + 1
+    s = -(-s // 256) * 256 if s > 256 else s
+
+    def z(shape, dt=dtype):
+        return jnp.zeros(shape, dt)
+
+    if spec.mixer == ATTN:
+        return {"k": z((batch, s, cfg.num_kv_heads, hd)),
+                "v": z((batch, s, cfg.num_kv_heads, hd)),
+                "pos": jnp.full((batch, s), -1, jnp.int32)}
+    if spec.mixer == MLA:
+        m = cfg.mla
+        return {"ckv": z((batch, s, m.kv_lora_rank)),
+                "kr": z((batch, s, m.rope_head_dim)),
+                "pos": jnp.full((batch, s), -1, jnp.int32)}
+    if spec.mixer == MLSTM:
+        dh = (2 * cfg.d_model) // cfg.num_heads    # mLSTM runs at 2x width
+        return {"C": z((batch, cfg.num_heads, dh, dh), jnp.float32),
+                "n": z((batch, cfg.num_heads, dh), jnp.float32),
+                "m": z((batch, cfg.num_heads), jnp.float32)}
+    if spec.mixer == SLSTM:
+        dh = cfg.d_model // cfg.num_heads
+        return {"c": z((batch, cfg.num_heads, dh), jnp.float32),
+                "n": z((batch, cfg.num_heads, dh), jnp.float32),
+                "h": z((batch, cfg.num_heads, dh), jnp.float32),
+                "m": z((batch, cfg.num_heads), jnp.float32)}
+    if spec.mixer == HYBRID:
+        ssm = cfg.ssm
+        d_inner = ssm.expand * cfg.d_model
+        out = {"k": z((batch, s, cfg.num_kv_heads, hd)),
+               "v": z((batch, s, cfg.num_kv_heads, hd)),
+               "pos": jnp.full((batch, s), -1, jnp.int32),
+               "ssm": z((batch, d_inner, ssm.state_size), jnp.float32),
+               "conv": z((batch, ssm.conv_size - 1, d_inner))}
+        return out
+    raise ValueError(spec.mixer)
+
+
+def effective_window(cfg: ModelConfig, spec: LayerSpec,
+                     max_len: int) -> Optional[int]:
+    """Layer window, with the beyond-paper long-context override applied to
+    global attention layers when serving beyond the native context."""
+    w = spec.window
+    if (w is None and spec.mixer in (ATTN, MLA)
+            and cfg.long_context_override is not None
+            and max_len > cfg.native_context):
+        w = cfg.long_context_override
+    return w
+
+
+# ---------------------------------------------------------------------------
+# Attention-cache updates
+# ---------------------------------------------------------------------------
+
+
+def write_prefill(cache: dict, new: dict, positions) -> dict:
+    """Write a full prompt into a (possibly ring) positional cache.
+
+    new: {"k": (B,S,H,D), ...} values aligned with ``positions`` (B,S); a
+    position of -1 marks right-padding and is routed to the dump slot.
+    For ring caches (ring size W < S) only the last W tokens land.
+    """
+    out = dict(cache)
+    ring = cache["pos"].shape[1] - 1                           # last = dump
+    B, S = positions.shape
+    take = min(S, ring)
+    # per-row: the last `take` *valid* tokens (positions are arange-based or
+    # -1 for right-padding, so valid count = max(pos)+1).
+    valid = jnp.maximum(positions.max(axis=1) + 1, 0)          # (B,)
+    start = jnp.clip(valid - take, 0, S - take)
+    idx = start[:, None] + jnp.arange(take)[None, :]           # (B, take)
+    b_idx = jnp.arange(B)[:, None]
+    pos_w = positions[b_idx, idx]
+    slots = jnp.where(pos_w >= 0, pos_w % ring, ring)          # (B, take)
+    for key, val in new.items():
+        out[key] = cache[key].at[b_idx, slots].set(
+            val[b_idx, idx].astype(cache[key].dtype))
+    out["pos"] = cache["pos"].at[b_idx, slots].set(pos_w)
+    return out
+
+
+def write_decode(cache: dict, new: dict, lengths) -> dict:
+    """Write one token per slot at absolute position ``lengths`` (B,)."""
+    out = dict(cache)
+    ring = cache["pos"].shape[1] - 1
+    slots = lengths % ring
+    b_idx = jnp.arange(cache["pos"].shape[0])
+    for key, val in new.items():
+        out[key] = cache[key].at[b_idx, slots].set(
+            val[:, 0].astype(cache[key].dtype))
+    out["pos"] = cache["pos"].at[b_idx, slots].set(lengths)
+    return out
+
+
+def cache_mask(cache_pos, q_pos, window: Optional[int]):
+    """(B,Sq,Sk) bool mask from stored absolute positions.
+
+    Empty slots (pos == -1) are never attended; ring overwrite correctness
+    follows from the stored positions themselves.
+    """
+    valid = cache_pos[:, None, :] >= 0
+    m = (cache_pos[:, None, :] <= q_pos[:, :, None]) & valid
+    if window is not None:
+        m &= cache_pos[:, None, :] > (q_pos[:, :, None] - window)
+    return m

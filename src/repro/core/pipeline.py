@@ -1,0 +1,130 @@
+"""Multi-stage parallel processing — paper pillar P4 (Figure 4).
+
+The paper splits serving into four OS processes: main, data preprocessing,
+model inference, and post-processing, connected by queues.  JAX device
+dispatch releases the GIL, so the identical dataflow runs here as *threads*
+over bounded queues (see DESIGN.md §3.3 for the adaptation note): while the
+accelerator runs batch N, the tokenizer stage prepares batch N+1 and the
+detokenizer drains batch N-1.
+
+``run_pipelined`` and ``run_sequential`` process the same work; the Table-1
+benchmark measures the ratio.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Sequence
+
+from repro.core.engine import InferenceEngine
+from repro.core.sampling import SamplingParams
+from repro.core.scheduler import DynamicBatcher, Request, pad_batch
+from repro.core.tokenizer import FastTokenizer
+
+_STOP = object()
+
+
+@dataclass
+class PipelineResult:
+    uid: int
+    text: str
+    token_ids: List[int]
+
+
+def _preprocess_worker(texts, tokenizer, batcher: DynamicBatcher,
+                       out_q: "queue.Queue", max_new_tokens: int):
+    """Stage 1: tokenize + dynamic batching."""
+    for uid, text in enumerate(texts):
+        batcher.add(Request(uid=uid, tokens=tokenizer.encode(text),
+                            max_new_tokens=max_new_tokens))
+    while True:
+        batch = batcher.next_batch()
+        if batch is None:
+            break
+        toks, lens = pad_batch(batch)
+        out_q.put((batch, toks, lens))
+    out_q.put(_STOP)
+
+
+def _inference_worker(engine: InferenceEngine, sp: SamplingParams,
+                      in_q: "queue.Queue", out_q: "queue.Queue"):
+    """Stage 2: model prefill + decode."""
+    while True:
+        item = in_q.get()
+        if item is _STOP:
+            out_q.put(_STOP)
+            return
+        batch, toks, lens = item
+        max_new = max(r.max_new_tokens for r in batch.requests)
+        gen = engine.generate_batch(toks, lens, max_new, sp)
+        out_q.put((batch, gen))
+
+
+def _postprocess_worker(tokenizer, in_q: "queue.Queue",
+                        results: List[PipelineResult]):
+    """Stage 3: strip padding, detokenize."""
+    while True:
+        item = in_q.get()
+        if item is _STOP:
+            return
+        batch, gen = item
+        for i, r in enumerate(batch.requests):
+            row = gen[i]
+            ids = [int(t) for t in row[row >= 0]]
+            results.append(PipelineResult(
+                uid=r.uid, token_ids=ids,
+                text=tokenizer.decode(ids) if tokenizer else ""))
+
+
+def run_pipelined(texts: Sequence[str], tokenizer: Optional[FastTokenizer],
+                  engine: InferenceEngine, *, max_new_tokens: int = 16,
+                  sp: SamplingParams = SamplingParams(), max_batch: int = 8,
+                  queue_depth: int = 4) -> List[PipelineResult]:
+    """Paper Figure-4 topology: pre || infer || post as concurrent stages."""
+    batcher = DynamicBatcher(max_batch=max_batch)
+    q_pre = queue.Queue(maxsize=queue_depth)
+    q_post = queue.Queue(maxsize=queue_depth)
+    results: List[PipelineResult] = []
+    threads = [
+        threading.Thread(target=_preprocess_worker,
+                         args=(texts, tokenizer, batcher, q_pre,
+                               max_new_tokens)),
+        threading.Thread(target=_inference_worker,
+                         args=(engine, sp, q_pre, q_post)),
+        threading.Thread(target=_postprocess_worker,
+                         args=(tokenizer, q_post, results)),
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    results.sort(key=lambda r: r.uid)
+    return results
+
+
+def run_sequential(texts: Sequence[str], tokenizer: Optional[FastTokenizer],
+                   engine: InferenceEngine, *, max_new_tokens: int = 16,
+                   sp: SamplingParams = SamplingParams(),
+                   max_batch: int = 8) -> List[PipelineResult]:
+    """The paper's pre-optimization flow: strictly sequential stages."""
+    batcher = DynamicBatcher(max_batch=max_batch)
+    for uid, text in enumerate(texts):
+        batcher.add(Request(uid=uid, tokens=tokenizer.encode(text),
+                            max_new_tokens=max_new_tokens))
+    results: List[PipelineResult] = []
+    while True:
+        batch = batcher.next_batch()
+        if batch is None:
+            break
+        toks, lens = pad_batch(batch)
+        gen = engine.generate_batch(toks, lens, max_new_tokens, sp)
+        for i, r in enumerate(batch.requests):
+            row = gen[i]
+            ids = [int(t) for t in row[row >= 0]]
+            results.append(PipelineResult(
+                uid=r.uid, token_ids=ids,
+                text=tokenizer.decode(ids) if tokenizer else ""))
+    results.sort(key=lambda r: r.uid)
+    return results

@@ -1,0 +1,55 @@
+"""Precision policy — paper pillar P1 (FP16 half-precision inference).
+
+The paper runs FP16 inference on GPU.  On TPU the MXU-native half precision
+is bf16, so the *default serving policy* here is bf16-compute; fp16 is kept
+selectable for paper fidelity (and is what the Table-1 reproduction
+benchmark uses).  A policy is three dtypes:
+
+  * ``param_dtype``   — storage dtype of the weights
+  * ``compute_dtype`` — dtype activations/matmuls run in
+  * ``output_dtype``  — dtype of logits (kept fp32 for a stable softmax)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Policy:
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.float32
+    output_dtype: jnp.dtype = jnp.float32
+
+    def cast_params(self, params):
+        """Cast a parameter pytree to ``param_dtype`` (storage)."""
+        return jax.tree.map(
+            lambda p: p.astype(self.param_dtype)
+            if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
+
+    def compute_cast(self, tree):
+        """Cast activations (or params at point-of-use) to compute dtype."""
+        return jax.tree.map(
+            lambda x: x.astype(self.compute_dtype)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
+
+    def output_cast(self, x):
+        return x.astype(self.output_dtype)
+
+
+FP32 = Policy()
+BF16 = Policy(jnp.bfloat16, jnp.bfloat16, jnp.float32)          # TPU-native default
+FP16 = Policy(jnp.float16, jnp.float16, jnp.float32)            # paper-faithful
+MIXED_TRAIN = Policy(jnp.float32, jnp.bfloat16, jnp.float32)    # fp32 master weights
+
+
+_POLICIES = {"fp32": FP32, "bf16": BF16, "fp16": FP16, "mixed": MIXED_TRAIN}
+
+
+def get_policy(name: str) -> Policy:
+    try:
+        return _POLICIES[name]
+    except KeyError:
+        raise ValueError(f"unknown policy {name!r}; one of {list(_POLICIES)}")

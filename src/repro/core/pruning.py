@@ -1,0 +1,133 @@
+"""Embedding-layer pruning — paper pillar P2.
+
+Two transforms, exactly as in the paper §3.2:
+
+  1. **Vocabulary pruning**: keep only high-frequency tokens (from corpus
+     statistics), shrink the token-embedding matrix (and untied LM head)
+     accordingly, and remap ids.  Out-of-keep-set tokens map to <unk>.
+     The paper trims UNIMO's 12800-token vocabulary; we generalize to every
+     assigned architecture (151936 / 256000 / 262144-row embeddings are the
+     strongest case: at 32k kept tokens gemma3's embedding shrinks 8x).
+
+  2. **Position-table trimming**: for learned-position models, slice the
+     position-embedding matrix to the serving context (the paper's
+     512x1024 -> 128x1024).  RoPE/sinusoidal archs have no table — the
+     transform is a documented no-op for them (DESIGN.md §4).
+
+Both are *functional* transforms: (params, cfg) -> (params', cfg', maps).
+Invariant (tested): logits over kept tokens are bit-identical to the
+unpruned model's logits at those token positions.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.tokenizer import SPECIALS
+
+
+@dataclass
+class PruneMaps:
+    """Id remapping produced by vocabulary pruning."""
+
+    keep_ids: np.ndarray          # (V_new,) old ids kept, ascending
+    old_to_new: np.ndarray        # (V_old,) new id, or UNK's new id
+    new_to_old: np.ndarray        # (V_new,) inverse
+
+    @property
+    def new_vocab(self) -> int:
+        return len(self.keep_ids)
+
+
+def select_keep_ids(freqs: Dict[int, int], vocab_size: int, *,
+                    max_vocab: Optional[int] = None,
+                    coverage: Optional[float] = None,
+                    always_keep: Sequence[int] = (0, 1, 2, 3)) -> np.ndarray:
+    """Pick the token ids to keep, by budget or by corpus coverage."""
+    assert (max_vocab is None) != (coverage is None), \
+        "specify exactly one of max_vocab / coverage"
+    counts = np.zeros(vocab_size, np.int64)
+    for tid, c in freqs.items():
+        if 0 <= tid < vocab_size:
+            counts[tid] = c
+    order = np.argsort(-counts, kind="stable")
+    if coverage is not None:
+        csum = np.cumsum(counts[order])
+        total = max(csum[-1], 1)
+        cut = int(np.searchsorted(csum / total, coverage) + 1)
+        chosen = order[:cut]
+    else:
+        chosen = order[:max_vocab]
+    keep = np.union1d(np.asarray(always_keep, np.int64),
+                      chosen[counts[chosen] > 0] if coverage is not None
+                      else chosen)
+    return np.sort(keep)
+
+
+def build_maps(keep_ids: np.ndarray, vocab_size: int,
+               unk_id: int = 1) -> PruneMaps:
+    keep_ids = np.sort(np.asarray(keep_ids, np.int64))
+    assert unk_id in keep_ids, "UNK must be kept"
+    old_to_new = np.full(vocab_size, -1, np.int64)
+    old_to_new[keep_ids] = np.arange(len(keep_ids))
+    unk_new = int(old_to_new[unk_id])
+    old_to_new[old_to_new < 0] = unk_new
+    return PruneMaps(keep_ids=keep_ids, old_to_new=old_to_new,
+                     new_to_old=keep_ids.copy())
+
+
+def prune_vocab(params, cfg: ModelConfig, maps: PruneMaps):
+    """Gather kept rows out of the embedding (and untied head) matrices."""
+    keep = jnp.asarray(maps.keep_ids)
+    new_embed = dict(params["embed"])
+    if cfg.num_codebooks:
+        new_embed["tokens"] = params["embed"]["tokens"][:, keep]
+        if "heads" in new_embed:
+            new_embed["heads"] = params["embed"]["heads"][:, keep]
+    else:
+        new_embed["tokens"] = params["embed"]["tokens"][keep]
+        if not cfg.tie_embeddings:
+            new_embed["head"] = params["embed"]["head"][:, keep]
+    new_params = dict(params)
+    new_params["embed"] = new_embed
+    new_cfg = cfg.replace(vocab_size=maps.new_vocab)
+    return new_params, new_cfg
+
+
+def trim_positions(params, cfg: ModelConfig, new_max_len: int):
+    """The paper's 512x1024 -> 128x1024 position-table trim."""
+    if cfg.pos_emb != "learned":
+        return params, cfg          # RoPE/sinusoidal: documented no-op
+    new_params = dict(params)
+    new_embed = dict(params["embed"])
+    new_embed["pos"] = params["embed"]["pos"][:new_max_len]
+    new_params["embed"] = new_embed
+    return new_params, cfg.replace(max_seq_len=new_max_len)
+
+
+def prune_model(params, cfg: ModelConfig, freqs: Dict[int, int], *,
+                max_vocab: Optional[int] = None,
+                coverage: Optional[float] = None,
+                new_max_len: Optional[int] = None):
+    """Full P2 transform. Returns (params', cfg', maps)."""
+    keep = select_keep_ids(freqs, cfg.vocab_size, max_vocab=max_vocab,
+                           coverage=coverage)
+    maps = build_maps(keep, cfg.vocab_size)
+    params, cfg = prune_vocab(params, cfg, maps)
+    if new_max_len is not None:
+        params, cfg = trim_positions(params, cfg, new_max_len)
+    return params, cfg, maps
+
+
+def remap_tokens(tokens: np.ndarray, maps: PruneMaps) -> np.ndarray:
+    """Map old-id token arrays into the pruned id space."""
+    return maps.old_to_new[np.asarray(tokens)]
+
+
+def unmap_tokens(tokens: np.ndarray, maps: PruneMaps) -> np.ndarray:
+    """Map pruned-space ids back to original ids (for detokenization)."""
+    return maps.new_to_old[np.asarray(tokens)]

@@ -1,0 +1,26 @@
+"""Token sampling for the decode loop."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.0      # 0 -> greedy
+    top_k: int = 0                # 0 -> full distribution
+
+
+def sample(logits, rng, sp: SamplingParams):
+    """logits: (B, V) fp32 -> (B,) int32 token ids."""
+    if sp.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / sp.temperature
+    if sp.top_k:
+        top_vals, _ = jax.lax.top_k(logits, sp.top_k)
+        cutoff = top_vals[:, -1:]
+        logits = jnp.where(logits >= cutoff, logits, -jnp.inf)
+    return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,92 @@
+"""Dynamic batch scheduling — paper §2.3 ("Dynamic Batch Size") + the data
+inference-order optimization from §1 ("optimized the allocation of data
+inference order").
+
+Requests are sorted by prompt length and grouped into batches whose padded
+shapes come from a small set of length buckets, so (a) padding waste is
+minimized (the paper's Figure-3 observation: real inputs are much shorter
+than the model maximum) and (b) XLA recompilation is bounded to the bucket
+set.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+DEFAULT_BUCKETS = (32, 64, 128, 256, 512, 1024, 2048, 4096)
+
+
+@dataclass
+class Request:
+    uid: int
+    tokens: List[int]                  # prompt token ids
+    max_new_tokens: int = 32
+    result: Optional[List[int]] = None # filled by the engine
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.tokens)
+
+
+@dataclass
+class Batch:
+    requests: List[Request]
+    padded_len: int
+
+    @property
+    def size(self) -> int:
+        return len(self.requests)
+
+
+def pick_bucket(length: int, buckets: Sequence[int]) -> int:
+    for b in buckets:
+        if length <= b:
+            return b
+    return buckets[-1]
+
+
+@dataclass
+class DynamicBatcher:
+    max_batch: int = 8
+    buckets: Sequence[int] = DEFAULT_BUCKETS
+    sort_by_length: bool = True        # the paper's inference-order trick
+    _queue: List[Request] = field(default_factory=list)
+
+    def add(self, req: Request) -> None:
+        self._queue.append(req)
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def next_batch(self) -> Optional[Batch]:
+        """Greedy: take up to max_batch requests sharing a length bucket."""
+        if not self._queue:
+            return None
+        if self.sort_by_length:
+            self._queue.sort(key=lambda r: r.prompt_len)
+        head_bucket = pick_bucket(self._queue[0].prompt_len, self.buckets)
+        take: List[Request] = []
+        rest: List[Request] = []
+        for r in self._queue:
+            if (len(take) < self.max_batch
+                    and pick_bucket(r.prompt_len, self.buckets)
+                    == head_bucket):
+                take.append(r)
+            else:
+                rest.append(r)
+        self._queue = rest
+        return Batch(requests=take, padded_len=head_bucket)
+
+
+def pad_batch(batch: Batch, pad_id: int = 0):
+    """-> (tokens (B, L) int32, lengths (B,) int32)."""
+    B, L = batch.size, batch.padded_len
+    toks = np.full((B, L), pad_id, np.int32)
+    lens = np.zeros((B,), np.int32)
+    for i, r in enumerate(batch.requests):
+        t = r.tokens[:L]
+        toks[i, :len(t)] = t
+        lens[i] = len(t)
+    return toks, lens

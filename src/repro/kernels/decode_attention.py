@@ -1,0 +1,123 @@
+"""Decode attention Pallas TPU kernel: one query token vs a long KV cache.
+
+This is the kernel form of the paper's K-V-cache pillar (P1): at each
+decode step only the new token's attention is computed, streaming cache
+blocks HBM->VMEM.  Unlike the prefill kernel, all query heads of a batch
+element are processed together (the single query row would waste the MXU
+otherwise):
+
+  grid = (B, num_k_blocks)   (k innermost, sequential)
+
+Per step: q tile (Hq, D) stays resident; one (block_k, Hkv, D) cache tile
+streams in; GQA grouping is a reshape of the q rows (Hkv, g, D) batched
+against the tile.  Running softmax state (m, l, acc) lives in VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_K = 256
+
+
+def shape_supported(q, k, block_k: int = DEFAULT_BLOCK_K) -> bool:
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    return (Sq == 1 and Hq % Hkv == 0 and D % 8 == 0
+            and k.shape[3] % 8 == 0 and Sk % min(block_k, Sk) == 0)
+
+
+def _kernel(q_ref, k_ref, v_ref, kp_ref, qp_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, scale, attn_softcap, window, nk, g):
+    ik = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                    # (Hq, D)
+    k = k_ref[0].astype(jnp.float32)                       # (bk, Hkv, D)
+    v = v_ref[0].astype(jnp.float32)                       # (bk, Hkv, Dv)
+    kp = kp_ref[0]                                         # (bk,)
+    qp = qp_ref[0]                                         # (1,)
+
+    Hq, D = q.shape
+    bk, Hkv, _ = k.shape
+    qg = q.reshape(Hkv, g, D)
+    # (Hkv, g, D) x (bk, Hkv, D) -> (Hkv, g, bk)
+    logits = jax.lax.dot_general(
+        qg, k, (((2,), (2,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32) * scale
+    if attn_softcap is not None:
+        logits = jnp.tanh(logits / attn_softcap) * attn_softcap
+    mask = (kp <= qp[0]) & (kp >= 0)
+    if window is not None:
+        mask &= kp > (qp[0] - window)
+    logits = jnp.where(mask[None, None, :], logits, -jnp.inf)
+
+    m_prev = m_scr[...]                                    # (Hkv, g)
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    p = jnp.exp(logits - m_safe[..., None])
+    p = jnp.where(mask[None, None, :], p, 0.0)
+
+    # (Hkv, g, bk) x (bk, Hkv, Dv) -> (Hkv, g, Dv)
+    pv = jax.lax.dot_general(
+        p, v, (((2,), (0,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32)
+    acc_scr[...] = acc_scr[...] * alpha[..., None] + pv
+    l_scr[...] = l_scr[...] * alpha + p.sum(-1)
+    m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-37)[..., None]
+        out = (acc_scr[...] / denom).reshape(Hq, acc_scr.shape[-1])
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "scale",
+                                             "attn_softcap", "block_k",
+                                             "interpret"))
+def decode_attention(q, k, v, k_pos, q_pos, *, window: Optional[int],
+                     scale: float, attn_softcap: Optional[float] = None,
+                     block_k: int = DEFAULT_BLOCK_K,
+                     interpret: bool = False):
+    """q: (B,1,Hq,D), k/v: (B,Sk,Hkv,Dv), k_pos: (B,Sk), q_pos: (B,1)."""
+    B, _, Hq, D = q.shape
+    Sk, Hkv, Dv = k.shape[1], k.shape[2], v.shape[3]
+    g = Hq // Hkv
+    bk = min(block_k, Sk)
+    nk = Sk // bk
+
+    kernel = functools.partial(_kernel, scale=scale,
+                               attn_softcap=attn_softcap, window=window,
+                               nk=nk, g=g)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, Hq, D), lambda b, ik: (b, 0, 0, 0)),
+            pl.BlockSpec((1, bk, Hkv, D), lambda b, ik: (b, ik, 0, 0)),
+            pl.BlockSpec((1, bk, Hkv, Dv), lambda b, ik: (b, ik, 0, 0)),
+            pl.BlockSpec((1, bk), lambda b, ik: (b, ik)),
+            pl.BlockSpec((1, 1), lambda b, ik: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Hq, Dv), lambda b, ik: (b, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 1, Hq, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((Hkv, g), jnp.float32),
+            pltpu.VMEM((Hkv, g), jnp.float32),
+            pltpu.VMEM((Hkv, g, Dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, k_pos, q_pos)
+    return out

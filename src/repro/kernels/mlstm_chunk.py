@@ -1,0 +1,140 @@
+"""Chunkwise mLSTM Pallas TPU kernel (xLSTM matrix-memory recurrence).
+
+The TPU-native form of the xLSTM fused CUDA kernel (DESIGN.md §3): the
+stabilized matrix-memory recurrence runs chunk-by-chunk with the carry
+state (C: dh x dh, n: dh, m: scalar per head) resident in VMEM scratch —
+intra-chunk math is (L x L) / (L x dh) MXU matmuls, inter-chunk state
+never round-trips HBM.
+
+  grid = (B, H, num_chunks)   (chunks innermost, sequential)
+
+Matches ``repro.models.ssm.mlstm_chunked`` (the jnp oracle) exactly; the
+wrapper takes the same (B, S, H, dh) layouts and the same state dict.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 128
+
+
+def shape_supported(q, chunk: int = DEFAULT_CHUNK) -> bool:
+    B, S, H, dh = q.shape
+    return S % min(chunk, S) == 0 and dh % 8 == 0 and S >= 1
+
+
+def _kernel(q_ref, k_ref, v_ref, i_ref, f_ref, c0_ref, n0_ref, m0_ref,
+            h_ref, cf_ref, nf_ref, mf_ref, c_scr, n_scr, m_scr, *, nchunk):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        c_scr[...] = c0_ref[0, 0]
+        n_scr[...] = n0_ref[0, 0]
+        m_scr[...] = m0_ref[0]
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (L, dh)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    ib = i_ref[0, 0].astype(jnp.float32)           # (L,)
+    fb = f_ref[0, 0].astype(jnp.float32)           # (L,) log forget
+    L = q.shape[0]
+
+    C_p = c_scr[...]
+    n_p = n_scr[...]
+    m_p = m_scr[0]
+
+    F = jnp.cumsum(fb)                              # (L,)
+    Ftot = F[-1]
+    # intra-chunk log weights: F_i - F_j + i_j  (j <= i)
+    logw = F[:, None] - F[None, :] + ib[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1) <= \
+        jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    logw = jnp.where(tri, logw, -jnp.inf)
+    logst = F + m_p                                 # state path decay (L,)
+    m_i = jnp.maximum(jnp.max(logw, axis=-1), logst)
+    m_i = jnp.where(jnp.isfinite(m_i), m_i, 0.0)
+    w = jnp.exp(logw - m_i[:, None])
+    st_w = jnp.exp(logst - m_i)
+
+    scores = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32) * w
+    num = (jax.lax.dot_general(scores, v, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+           + st_w[:, None] * jax.lax.dot_general(
+               q, C_p, (((1,), (0,)), ((), ())),
+               preferred_element_type=jnp.float32))
+    den = scores.sum(-1) + st_w * (q @ n_p)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[:, None]
+    h_ref[0, 0] = h.astype(h_ref.dtype)
+
+    # ---- state update to chunk end -----------------------------------
+    m_new = jnp.maximum(m_p + Ftot, jnp.max(Ftot - F + ib))
+    decay = jnp.exp(m_p + Ftot - m_new)
+    wk_end = jnp.exp(Ftot - F + ib - m_new)         # (L,)
+    c_scr[...] = decay * C_p + jax.lax.dot_general(
+        k * wk_end[:, None], v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    n_scr[...] = decay * n_p + (wk_end[None, :] @ k)[0]
+    m_scr[...] = m_new[None]
+
+    @pl.when(ic == nchunk - 1)
+    def _finish():
+        cf_ref[0, 0] = c_scr[...]
+        nf_ref[0, 0] = n_scr[...]
+        mf_ref[0, 0] = m_scr[0]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mlstm_chunked_kernel(q, k, v, i_pre, logf, state, *,
+                         chunk: int = DEFAULT_CHUNK,
+                         interpret: bool = False):
+    """q,k,v: (B,S,H,dh); i_pre/logf: (B,S,H); state: {"C","n","m"}.
+
+    Returns (h (B,S,H,dh) fp32, new_state) — same contract as
+    ``ssm.mlstm_chunked``.
+    """
+    B, S, H, dh = q.shape
+    L = min(chunk, S)
+    nchunk = S // L
+    # (B,H,S,dh) layouts for clean chunk blocking
+    qt = q.transpose(0, 2, 1, 3)
+    kt = (k.transpose(0, 2, 1, 3))
+    vt = v.transpose(0, 2, 1, 3)
+    it = i_pre.transpose(0, 2, 1)
+    ft = logf.transpose(0, 2, 1)
+
+    kernel = functools.partial(_kernel, nchunk=nchunk)
+    grid = (B, H, nchunk)
+    spec_seq = pl.BlockSpec((1, 1, L, dh), lambda b, h, c: (b, h, c, 0))
+    spec_gate = pl.BlockSpec((1, 1, L), lambda b, h, c: (b, h, c))
+    spec_state = pl.BlockSpec((1, 1, dh, dh), lambda b, h, c: (b, h, 0, 0))
+    spec_vec = pl.BlockSpec((1, 1, dh), lambda b, h, c: (b, h, 0))
+    spec_scal = pl.BlockSpec((1, 1), lambda b, h, c: (b, h))
+
+    h_out, c_f, n_f, m_f = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec_seq, spec_seq, spec_seq, spec_gate, spec_gate,
+                  spec_state, spec_vec, spec_scal],
+        out_specs=[spec_seq, spec_state, spec_vec, spec_scal],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, dh), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, dh, dh), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, dh), jnp.float32),
+            jax.ShapeDtypeStruct((B, H), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((dh, dh), jnp.float32),
+            pltpu.VMEM((dh,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt, it, ft, state["C"], state["n"], state["m"])
+    return (h_out.transpose(0, 2, 1, 3),
+            {"C": c_f, "n": n_f, "m": m_f})

@@ -1,0 +1,82 @@
+"""Jit'd wrappers + runtime dispatch for the Pallas kernels.
+
+Kernel modes:
+  * "off"       — pure-jnp paths only (default on CPU; also the dry-run
+                  lowering path so cost_analysis sees real HLO FLOPs).
+  * "interpret" — Pallas kernels in interpret mode (CPU correctness runs).
+  * "tpu"       — compiled Pallas kernels (real hardware).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+_MODE = "off"
+
+
+def kernel_mode() -> str:
+    return _MODE
+
+
+def set_kernel_mode(mode: str) -> None:
+    global _MODE
+    assert mode in ("off", "interpret", "tpu"), mode
+    _MODE = mode
+
+
+@contextlib.contextmanager
+def kernel_mode_ctx(mode: str):
+    prev = kernel_mode()
+    set_kernel_mode(mode)
+    try:
+        yield
+    finally:
+        set_kernel_mode(prev)
+
+
+# ---------------------------------------------------------------------------
+# Dispatchers (return None -> caller falls back to the jnp reference)
+# ---------------------------------------------------------------------------
+
+
+def maybe_flash_attention(q, k, v, q_pos, k_pos, *, window, scale,
+                          attn_softcap=None):
+    if _MODE == "off":
+        return None
+    from repro.kernels import flash_attention as FA
+    if not FA.shape_supported(q, k):
+        return None
+    return FA.flash_attention(q, k, v, q_pos, k_pos, window=window,
+                              scale=scale, attn_softcap=attn_softcap,
+                              interpret=(_MODE == "interpret"))
+
+
+def maybe_decode_attention(q, k, v, k_pos, q_pos, *, window, scale,
+                           attn_softcap=None):
+    if _MODE == "off":
+        return None
+    from repro.kernels import decode_attention as DA
+    if not DA.shape_supported(q, k):
+        return None
+    return DA.decode_attention(q, k, v, k_pos, q_pos, window=window,
+                               scale=scale, attn_softcap=attn_softcap,
+                               interpret=(_MODE == "interpret"))
+
+
+def maybe_rmsnorm(x, w):
+    if _MODE == "off":
+        return None
+    from repro.kernels import rmsnorm as RN
+    if not RN.shape_supported(x):
+        return None
+    return RN.fused_rmsnorm(x, w, interpret=(_MODE == "interpret"))
+
+
+def maybe_mlstm_chunked(q, k, v, i_pre, logf, state):
+    if _MODE == "off":
+        return None
+    from repro.kernels import mlstm_chunk as MC
+    if not MC.shape_supported(q):
+        return None
+    return MC.mlstm_chunked_kernel(q, k, v, i_pre, logf, state,
+                                   interpret=(_MODE == "interpret"))

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38
+
+
+def _mask(q_pos, k_pos, window):
+    m = (k_pos[:, None, :] <= q_pos[:, :, None]) & (k_pos[:, None, :] >= 0)
+    if window is not None:
+        m &= k_pos[:, None, :] > (q_pos[:, :, None] - window)
+    return m
+
+
+def flash_attention_ref(q, k, v, q_pos, k_pos, *, window: Optional[int],
+                        scale: float, attn_softcap: Optional[float] = None):
+    """q: (B,Sq,Hq,D), k/v: (B,Sk,Hkv,D) -> (B,Sq,Hq,Dv)."""
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    g = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, g, D)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if attn_softcap is not None:
+        logits = jnp.tanh(logits / attn_softcap) * attn_softcap
+    mask = _mask(q_pos, k_pos, window)
+    logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    p = jnp.where(mask.any(-1)[:, None, None, :, None], p, 0.0)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, v.shape[-1]).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, k_pos, q_pos, *, window: Optional[int],
+                         scale: float, attn_softcap: Optional[float] = None):
+    """q: (B,1,Hq,D) vs cache k/v: (B,Sk,Hkv,D) -> (B,1,Hq,Dv)."""
+    return flash_attention_ref(q, k, v, q_pos, k_pos, window=window,
+                               scale=scale, attn_softcap=attn_softcap)
+
+
+def rmsnorm_ref(x, w, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * (1.0 + w.astype(jnp.float32))).astype(dt)

@@ -1,0 +1,45 @@
+"""Production mesh construction (TPU v5e pods; CPU placeholders in dry-run).
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+SINGLE_POD = (16, 16)                  # 256 chips
+MULTI_POD = (2, 16, 16)                # 2 pods x 256 chips
+
+# TPU v5e hardware constants (roofline; per chip)
+PEAK_FLOPS_BF16 = 197e12               # FLOP/s
+HBM_BW = 819e9                         # B/s
+ICI_BW = 50e9                          # B/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) != n:
+        if len(devices) < n:
+            raise RuntimeError(
+                f"need {n} devices, have {len(devices)}; dry-run hosts must "
+                "set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+                "before any jax import")
+        devices = devices[:n]
+    import numpy as np
+    dev_array = np.asarray(devices).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def make_host_mesh(model_axis: int = 1) -> jax.sharding.Mesh:
+    """Degenerate mesh over the actual local devices (tests/examples)."""
+    import numpy as np
+    devs = np.asarray(jax.devices())
+    n = len(devs)
+    data = n // model_axis
+    return jax.sharding.Mesh(devs[:data * model_axis].reshape(
+        data, model_axis), ("data", "model"))

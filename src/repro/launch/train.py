@@ -1,0 +1,88 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On the CPU host this trains reduced configs end-to-end; on a real pod the
+same script shards params/optimizer per repro.sharding over the production
+mesh (--mesh single|multi).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config, get_reduced, list_archs
+from repro.core.precision import get_policy
+from repro.core.tokenizer import FastTokenizer
+from repro.data.pipeline import packed_batches, random_batches, \
+    synthetic_corpus
+from repro.models import transformer as T
+from repro.training import checkpoint as CKPT
+from repro.training import optimizer as OPT
+from repro.training.train_loop import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced variant (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--policy", default="fp32",
+                    choices=["fp32", "bf16", "fp16", "mixed"])
+    ap.add_argument("--synthetic-tokens", action="store_true",
+                    help="random tokens instead of the Zipf corpus")
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    policy = get_policy(args.policy)
+    params = T.init_params(jax.random.PRNGKey(0), cfg, policy)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} layers={cfg.num_layers} params={n_params:,}")
+
+    if args.synthetic_tokens or cfg.num_codebooks or cfg.num_prefix_embeds:
+        batches = random_batches(cfg.vocab_size, batch_size=args.batch_size,
+                                 seq_len=args.seq_len,
+                                 num_codebooks=cfg.num_codebooks)
+    else:
+        corpus = synthetic_corpus(2000)
+        tok = FastTokenizer.train(corpus, min(cfg.vocab_size, 4000))
+        batches = packed_batches(tok, corpus, batch_size=args.batch_size,
+                                 seq_len=args.seq_len)
+
+    opt_cfg = OPT.AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps),
+                              total_steps=args.steps)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, policy=policy))
+    opt_state = OPT.init_state(params)
+
+    t0 = time.time()
+    toks_seen = 0
+    for i in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(batches).items()}
+        if cfg.num_prefix_embeds:
+            batch["prefix_embeds"] = 0.02 * jax.random.normal(
+                jax.random.PRNGKey(i),
+                (args.batch_size, cfg.num_prefix_embeds, cfg.d_model))
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        toks_seen += args.batch_size * args.seq_len
+        if i % args.log_every == 0 or i == args.steps - 1:
+            dt = time.time() - t0
+            print(json.dumps({"step": i, "loss": round(float(m["loss"]), 4),
+                              "lr": float(m["lr"]),
+                              "gnorm": round(float(m["gnorm"]), 3),
+                              "tok_per_s": int(toks_seen / max(dt, 1e-9))}))
+    if args.checkpoint:
+        CKPT.save(args.checkpoint, params, opt_state,
+                  meta={"arch": cfg.name, "steps": args.steps})
+        print(f"checkpoint -> {args.checkpoint}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,141 @@
+"""DeepSeek-V3 Multi-head Latent Attention (MLA).
+
+Two execution forms:
+
+  * **naive** (train / prefill): decompress the latent into per-head K/V and
+    run standard attention — simple, differentiable.
+  * **absorbed** (decode): the paper pillar P1's KV-cache insight in its MLA
+    form.  Only the compressed latent ``c_kv`` (kv_lora_rank) plus the
+    shared rotated key ``k_rope`` are cached; at decode time the query is
+    *absorbed* through the decompression matrices so attention runs directly
+    in latent space.  Cache bytes per token: rank+rope = 576 floats instead
+    of 2*128*(128+128) — the compression that makes 128-head decode at 32k
+    context feasible.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import kv_cache as KV
+from repro.models import layers as L
+
+
+def mla_init(rng, cfg: ModelConfig):
+    m, d, H = cfg.mla, cfg.d_model, cfg.num_heads
+    ks = jax.random.split(rng, 7)
+    qh = m.nope_head_dim + m.rope_head_dim
+    return {
+        "wdq": L.dense_init(ks[0], d, m.q_lora_rank),
+        "q_norm": {"w": jnp.zeros((m.q_lora_rank,))},
+        "wuq": L.dense_init(ks[1], m.q_lora_rank, H * qh),
+        "wdkv": L.dense_init(ks[2], d, m.kv_lora_rank),
+        "kv_norm": {"w": jnp.zeros((m.kv_lora_rank,))},
+        "wukv": L.dense_init(ks[3], m.kv_lora_rank,
+                             H * (m.nope_head_dim + m.v_head_dim)),
+        "wkr": L.dense_init(ks[4], d, m.rope_head_dim),
+        "wo": L.dense_init(ks[5], H * m.v_head_dim, d),
+    }
+
+
+def _project(cfg, p, x, positions):
+    """Common projections. Returns q_nope, q_rope, c_kv(normed), k_rope."""
+    m, H = cfg.mla, cfg.num_heads
+    B, S, _ = x.shape
+    cq = L.rmsnorm(x @ p["wdq"].astype(x.dtype), p["q_norm"]["w"])
+    q = (cq @ p["wuq"].astype(x.dtype)).reshape(
+        B, S, H, m.nope_head_dim + m.rope_head_dim)
+    q_nope, q_rope = q[..., :m.nope_head_dim], q[..., m.nope_head_dim:]
+    q_rope = L.rope(q_rope, positions, cfg.rope_theta)
+    ckv = L.rmsnorm(x @ p["wdkv"].astype(x.dtype), p["kv_norm"]["w"])
+    kr = L.rope((x @ p["wkr"].astype(x.dtype))[:, :, None, :],
+                positions, cfg.rope_theta)[:, :, 0, :]            # (B,S,rope)
+    return q_nope, q_rope, ckv, kr
+
+
+def mla_scale(cfg: ModelConfig) -> float:
+    m = cfg.mla
+    return (m.nope_head_dim + m.rope_head_dim) ** -0.5
+
+
+def mla_full(cfg: ModelConfig, p, x, positions, k_pos, window=None):
+    """Naive form over the in-context tokens (train/prefill).
+
+    Returns (out (B,S,d), {"ckv": ..., "kr": ...} to cache).
+    """
+    m, H = cfg.mla, cfg.num_heads
+    B, S, _ = x.shape
+    q_nope, q_rope, ckv, kr = _project(cfg, p, x, positions)
+    kv = (ckv @ p["wukv"].astype(x.dtype)).reshape(
+        B, S, H, m.nope_head_dim + m.v_head_dim)
+    k_nope, v = kv[..., :m.nope_head_dim], kv[..., m.nope_head_dim:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr[:, :, None, :], (B, S, H, m.rope_head_dim))],
+        axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    ctx = L.mha_attention(q, k, v, positions, k_pos, window=window,
+                          scale=mla_scale(cfg), attn_softcap=None)
+    out = ctx.reshape(B, S, H * m.v_head_dim) @ p["wo"].astype(x.dtype)
+    return out, {"ckv": ckv, "kr": kr}
+
+
+def mla_prefill_cached(cfg: ModelConfig, p, x, cache, positions, cache_pos,
+                       window=None):
+    """Prefill continuing from a pre-filled latent cache (prefix caching):
+    write the new latents, then decompress the *whole* cache and attend."""
+    m, H = cfg.mla, cfg.num_heads
+    B, S, _ = x.shape
+    q_nope, q_rope, ckv, kr = _project(cfg, p, x, positions)
+    cache = KV.write_prefill(cache, {"ckv": ckv, "kr": kr}, cache_pos)
+    ckv_all = cache["ckv"].astype(x.dtype)                        # (B,Sc,r)
+    kr_all = cache["kr"].astype(x.dtype)
+    Sc = ckv_all.shape[1]
+    kv = (ckv_all @ p["wukv"].astype(x.dtype)).reshape(
+        B, Sc, H, m.nope_head_dim + m.v_head_dim)
+    k_nope, v = kv[..., :m.nope_head_dim], kv[..., m.nope_head_dim:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr_all[:, :, None, :],
+                                  (B, Sc, H, m.rope_head_dim))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    ctx = L.mha_attention(q, k, v, positions, cache["pos"], window=window,
+                          scale=mla_scale(cfg), attn_softcap=None)
+    out = ctx.reshape(B, S, H * m.v_head_dim) @ p["wo"].astype(x.dtype)
+    return out, cache
+
+
+def mla_decode(cfg: ModelConfig, p, x, cache, lengths):
+    """Absorbed-form single-token decode against the latent cache."""
+    m, H = cfg.mla, cfg.num_heads
+    B = x.shape[0]
+    positions = lengths[:, None]
+    q_nope, q_rope, ckv_new, kr_new = _project(cfg, p, x, positions)
+    cache = KV.write_decode(cache, {"ckv": ckv_new, "kr": kr_new}, lengths)
+
+    wukv = p["wukv"].astype(jnp.float32).reshape(
+        m.kv_lora_rank, H, m.nope_head_dim + m.v_head_dim)
+    wk = wukv[..., :m.nope_head_dim]                              # (r,H,nope)
+    wv = wukv[..., m.nope_head_dim:]                              # (r,H,v)
+
+    # absorb q through the key-decompression: (B,1,H,nope)x(r,H,nope)->(B,H,r)
+    from repro import perf_flags
+    half = perf_flags.flag("attn_bf16")   # §Perf: no fp32 copy of the cache
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32), wk)
+    ckv_f = cache["ckv"] if half else cache["ckv"].astype(jnp.float32)
+    kr_f = cache["kr"] if half else cache["kr"].astype(jnp.float32)
+    q_lat_s = q_lat.astype(ckv_f.dtype)
+    q_rope_s = q_rope[:, 0].astype(kr_f.dtype)
+    scores = (jnp.einsum("bhr,bsr->bhs", q_lat_s, ckv_f,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bhd,bsd->bhs", q_rope_s, kr_f,
+                           preferred_element_type=jnp.float32)) \
+        * mla_scale(cfg)
+    mask = KV.cache_mask(cache["pos"], positions, None)[:, 0]     # (B,Sc)
+    scores = jnp.where(mask[:, None, :], scores, L.NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx_lat = jnp.einsum("bhs,bsr->bhr", probs.astype(ckv_f.dtype), ckv_f,
+                         preferred_element_type=jnp.float32)      # (B,H,r)
+    ctx = jnp.einsum("bhr,rhd->bhd", ctx_lat, wv)                 # (B,H,v)
+    out = (ctx.reshape(B, 1 * H * m.v_head_dim).astype(x.dtype)
+           .reshape(B, H * m.v_head_dim) @ p["wo"].astype(x.dtype))
+    return out[:, None, :], cache

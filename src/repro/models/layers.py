@@ -1,0 +1,364 @@
+"""Core building blocks, pure-functional JAX (params are nested dicts).
+
+Everything here is written against the *reference* jnp path; the Pallas
+kernels in ``repro.kernels`` implement the hot paths (flash attention,
+decode attention, rmsnorm) and are swapped in via ``repro.kernels.ops``
+runtime mode without changing model code.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(rng, in_dim: int, out_dim: int, dtype=jnp.float32):
+    scale = in_dim ** -0.5
+    return (jax.random.normal(rng, (in_dim, out_dim), dtype=jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(rng, vocab: int, dim: int, dtype=jnp.float32):
+    return (jax.random.normal(rng, (vocab, dim), dtype=jnp.float32)
+            * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, w, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def layernorm(x, w, b, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * w + b
+    return out.astype(dt)
+
+
+def norm_init(cfg: ModelConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    if cfg.norm == "rmsnorm":
+        return {"w": jnp.zeros((d,))}
+    return {"w": jnp.ones((d,)), "b": jnp.zeros((d,))}
+
+
+def apply_norm(cfg: ModelConfig, p, x):
+    if "b" in p:
+        return layernorm(x, p["w"], p["b"])
+    return rmsnorm(x, p["w"])
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs        # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                              # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x, cap: Optional[float]):
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ---------------------------------------------------------------------------
+# Masks
+# ---------------------------------------------------------------------------
+
+NEG_INF = -2.3819763e38  # most-negative bf16-representable; safe in fp32 too
+
+
+def causal_mask(q_pos, k_pos, window: Optional[int] = None):
+    """Boolean mask (..., Sq, Sk): True = attend.
+
+    q_pos/k_pos: integer position arrays broadcastable to (..., Sq) / (..., Sk).
+    """
+    m = k_pos[..., None, :] <= q_pos[..., :, None]
+    if window is not None:
+        m &= k_pos[..., None, :] > (q_pos[..., :, None] - window)
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA) — reference / chunked(flash-at-HLO-level) / Pallas dispatch
+# ---------------------------------------------------------------------------
+
+# above this many keys the chunked (never-materialize-S^2) path is used, so
+# prefill_32k / long_500k graphs stay within per-device HBM.
+CHUNK_THRESHOLD = 2048
+KV_BLOCK = 1024
+
+
+def mha_attention(q, k, v, q_pos, k_pos, *, window: Optional[int],
+                  scale: float, attn_softcap: Optional[float] = None):
+    """Causal GQA attention driven by absolute positions.
+
+    q: (B,Sq,Hq,D), k/v: (B,Sk,Hkv,D), q_pos: (B,Sq), k_pos: (B,Sk) with
+    -1 marking invalid (empty cache slot / padding) keys.
+
+    Dispatch order: Pallas flash kernel (if kernel mode enabled and shape
+    qualifies) -> chunked lax.scan flash (large Sk) -> naive reference.
+    All three compute identical math.
+    """
+    from repro.kernels import ops as kops
+    out = kops.maybe_flash_attention(q, k, v, q_pos, k_pos, window=window,
+                                     scale=scale, attn_softcap=attn_softcap)
+    if out is not None:
+        return out
+    # chunked only for multi-query-token phases: single-token decode against
+    # a (possibly sequence-sharded) cache contracts cleanly as one einsum,
+    # and the block reshape would break the cache's sequence sharding.
+    if q.shape[1] > 1 and k.shape[1] > CHUNK_THRESHOLD:
+        return attention_chunked(q, k, v, q_pos, k_pos, window=window,
+                                 scale=scale, attn_softcap=attn_softcap)
+    return attention_ref(q, k, v, q_pos, k_pos, window=window, scale=scale,
+                         attn_softcap=attn_softcap)
+
+
+def position_mask(q_pos, k_pos, window: Optional[int]):
+    """(B,Sq,Sk) bool: causal, windowed, and k_pos>=0 validity."""
+    m = (k_pos[:, None, :] <= q_pos[:, :, None]) & (k_pos[:, None, :] >= 0)
+    if window is not None:
+        m &= k_pos[:, None, :] > (q_pos[:, :, None] - window)
+    return m
+
+
+def _score_inputs(q, k):
+    """attn_bf16 (§Perf): feed half-precision operands straight into the
+    MXU with fp32 accumulation instead of materializing fp32 casts of the
+    (potentially multi-GB) KV cache."""
+    from repro import perf_flags
+    if perf_flags.flag("attn_bf16"):
+        return q, k
+    return q.astype(jnp.float32), k.astype(jnp.float32)
+
+
+def _pv_inputs(p, v):
+    from repro import perf_flags
+    if perf_flags.flag("attn_bf16"):
+        return p.astype(v.dtype), v
+    return p, v.astype(jnp.float32)
+
+
+def attention_ref(q, k, v, q_pos, k_pos, *, window, scale, attn_softcap=None):
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    g = Hq // Hkv
+    qg, kk = _score_inputs(q.reshape(B, Sq, Hkv, g, D), k)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kk,
+                        preferred_element_type=jnp.float32) * scale
+    logits = softcap(logits, attn_softcap)
+    mask = position_mask(q_pos, k_pos, window)                    # (B,Sq,Sk)
+    logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    # rows with no valid key (all -inf) -> softmax gives uniform; zero them.
+    any_valid = mask.any(-1)[:, None, None, :, None]
+    p = jnp.where(any_valid, p, 0.0)
+    pp, vv = _pv_inputs(p, v)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", pp, vv,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, Hq, v.shape[-1]).astype(q.dtype)
+
+
+def attention_chunked(q, k, v, q_pos, k_pos, *, window, scale,
+                      attn_softcap=None, block: int = KV_BLOCK):
+    """Flash-attention algorithm expressed as a lax.scan over KV blocks.
+
+    Never materializes the (Sq, Sk) score matrix: peak extra memory is one
+    (B, Hq, Sq, block) tile reused across scan steps.  This is the compiled
+    fallback for huge-context graphs on hosts where the Pallas kernel is
+    unavailable; math matches attention_ref exactly (tested).
+    """
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    nblk = -(-Sk // block)
+    pad = nblk * block - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+    Dv = v.shape[-1]
+    kb = k.reshape(B, nblk, block, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nblk, block, Hkv, Dv).transpose(1, 0, 2, 3, 4)
+    pb = k_pos.reshape(B, nblk, block).transpose(1, 0, 2)
+    qg = q.reshape(B, Sq, Hkv, g, D)
+    acc0 = jnp.zeros((B, Hkv, g, Sq, Dv), jnp.float32)
+    m0 = jnp.full((B, Hkv, g, Sq), -jnp.inf, jnp.float32)
+    d0 = jnp.zeros((B, Hkv, g, Sq), jnp.float32)
+
+    def step(carry, blk):
+        acc, m_run, den = carry
+        kc, vc, pc = blk
+        qq, kk = _score_inputs(qg, kc)
+        logits = jnp.einsum("bqhgd,bkhd->bhgqk", qq, kk,
+                            preferred_element_type=jnp.float32) * scale
+        logits = softcap(logits, attn_softcap)
+        mask = position_mask(q_pos, pc, window)                   # (B,Sq,blk)
+        logits = jnp.where(mask[:, None, None], logits, -jnp.inf)
+        blk_max = jnp.max(logits, axis=-1)
+        new_m = jnp.maximum(m_run, blk_max)
+        safe_m = jnp.where(jnp.isfinite(new_m), new_m, 0.0)
+        alpha = jnp.where(jnp.isfinite(m_run), jnp.exp(m_run - safe_m), 0.0)
+        pexp = jnp.exp(logits - safe_m[..., None])
+        pexp = jnp.where(mask[:, None, None], pexp, 0.0)
+        pp, vv = _pv_inputs(pexp, vc)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", pp, vv,
+            preferred_element_type=jnp.float32)
+        den = den * alpha + pexp.sum(-1)
+        return (acc, new_m, den), None
+
+    (acc, _, den), _ = jax.lax.scan(step, (acc0, m0, d0), (kb, vb, pb))
+    out = acc / jnp.maximum(den[..., None], 1e-37)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, Dv)
+    return out.astype(q.dtype)
+
+
+def attn_init(rng, cfg: ModelConfig):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": dense_init(ks[0], d, cfg.num_heads * hd),
+        "wk": dense_init(ks[1], d, cfg.num_kv_heads * hd),
+        "wv": dense_init(ks[2], d, cfg.num_kv_heads * hd),
+        "wo": dense_init(ks[3], cfg.num_heads * hd, d),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = {"w": jnp.zeros((hd,))}
+        p["k_norm"] = {"w": jnp.zeros((hd,))}
+    return p
+
+
+def attn_qkv(cfg: ModelConfig, p, x, positions, theta: Optional[float] = None):
+    """Project to rotated q, k, v.  x: (B,S,d) -> q(B,S,Hq,D), k/v(B,S,Hkv,D)."""
+    B, S, _ = x.shape
+    theta = theta if theta is not None else cfg.rope_theta
+    hd = cfg.resolved_head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, cfg.num_heads, hd)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(B, S, cfg.num_kv_heads, hd)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(B, S, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"]["w"])
+        k = rmsnorm(k, p["k_norm"]["w"])
+    if cfg.pos_emb == "rope":
+        q = rope(q, positions, theta)
+        k = rope(k, positions, theta)
+    return q, k, v
+
+
+def attn_out(cfg: ModelConfig, p, ctx):
+    B, S = ctx.shape[:2]
+    return ctx.reshape(B, S, -1) @ p["wo"].astype(ctx.dtype)
+
+
+def attn_scale(cfg: ModelConfig) -> float:
+    return (cfg.attn_scale if cfg.attn_scale is not None
+            else cfg.resolved_head_dim ** -0.5)
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+
+
+def ffn_init(rng, cfg: ModelConfig, width: Optional[int] = None):
+    d = cfg.d_model
+    w = width or cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    if cfg.activation in ("swiglu", "geglu"):
+        return {"wi": dense_init(ks[0], d, w), "wg": dense_init(ks[1], d, w),
+                "wo": dense_init(ks[2], w, d)}
+    return {"wi": dense_init(ks[0], d, w), "wo": dense_init(ks[2], w, d)}
+
+
+def ffn_apply(cfg: ModelConfig, p, x):
+    h = x @ p["wi"].astype(x.dtype)
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(x @ p["wg"].astype(x.dtype)) * h
+    elif cfg.activation == "geglu":
+        h = jax.nn.gelu(x @ p["wg"].astype(x.dtype), approximate=True) * h
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    return h @ p["wo"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(cfg: ModelConfig, params, tokens):
+    """tokens: (B,S) int or (B,S,C) int for multi-codebook audio."""
+    emb = params["embed"]["tokens"]
+    if cfg.num_codebooks:
+        # emb: (C, V, d), tokens: (B, S, C) — gather per codebook, sum streams
+        parts = [jnp.take(emb[c], tokens[..., c], axis=0)
+                 for c in range(cfg.num_codebooks)]
+        x = sum(parts)
+    else:
+        x = jnp.take(emb, tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def unembed(cfg: ModelConfig, params, x):
+    """x: (B,S,d) -> logits fp32. Multi-codebook: (B,S,C,V)."""
+    xf = x.astype(jnp.float32)
+    if cfg.num_codebooks:
+        heads = params["embed"].get("heads")
+        if heads is None:
+            heads = params["embed"]["tokens"]       # tied: (C,V,d)
+        logits = jnp.einsum("bsd,cvd->bscv", xf, heads.astype(jnp.float32))
+    else:
+        head = (params["embed"]["tokens"] if cfg.tie_embeddings
+                else params["embed"]["head"])
+        logits = xf @ head.astype(jnp.float32).T if cfg.tie_embeddings \
+            else xf @ head.astype(jnp.float32)
+    return softcap(logits, cfg.final_softcap)
+
+
+def embed_params_init(rng, cfg: ModelConfig):
+    ks = jax.random.split(rng, 3)
+    p = {}
+    if cfg.num_codebooks:
+        p["tokens"] = jnp.stack([
+            embed_init(k, cfg.vocab_size, cfg.d_model)
+            for k in jax.random.split(ks[0], cfg.num_codebooks)])
+    else:
+        p["tokens"] = embed_init(ks[0], cfg.vocab_size, cfg.d_model)
+        if not cfg.tie_embeddings:
+            p["head"] = dense_init(ks[1], cfg.d_model, cfg.vocab_size)
+    if cfg.pos_emb == "learned":
+        p["pos"] = embed_init(ks[2], cfg.max_seq_len, cfg.d_model)
+    return p

@@ -1,0 +1,184 @@
+"""Mixture-of-Experts FFN (DeepSeek-V3 / Qwen3-MoE style).
+
+Dispatch is sort-based with static capacity (GShard-style), expressed as an
+expert-batched einsum ``ecd,edf->ecf`` whose expert axis shards over the
+``model`` mesh axis (expert parallelism).  Token gather/scatter around the
+einsum becomes an all-to-all-ish collective pattern under pjit.
+
+Router options: softmax top-k (Qwen3-MoE) or sigmoid scores normalized over
+the selected top-k (DeepSeek-V3), plus optional shared experts and the
+standard load-balance auxiliary loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+def moe_init(rng, cfg: ModelConfig):
+    m = cfg.moe
+    d, f, E = cfg.d_model, m.d_ff_expert, m.num_experts
+    ks = jax.random.split(rng, 6)
+
+    def expert_stack(rng_key, i, o):
+        keys = jax.random.split(rng_key, E)
+        return jax.vmap(lambda k: L.dense_init(k, i, o))(keys)
+
+    p = {
+        "router": L.dense_init(ks[0], d, E),
+        "wi": expert_stack(ks[1], d, f),
+        "wg": expert_stack(ks[2], d, f),
+        "wo": expert_stack(ks[3], f, d),
+    }
+    if m.num_shared_experts:
+        p["shared"] = L.ffn_init(ks[4], cfg, m.num_shared_experts * f)
+    return p
+
+
+def _capacity(num_tokens: int, cfg: ModelConfig) -> int:
+    m = cfg.moe
+    c = int(num_tokens * m.top_k * m.capacity_factor / m.num_experts) + 1
+    return max(8, -(-c // 8) * 8)  # round up to multiple of 8, >= 8
+
+
+def moe_apply(cfg: ModelConfig, p, x, router_kind: str = "softmax"):
+    """x: (B, S, d) -> (out (B,S,d), aux_loss scalar).
+
+    Two dispatch backends:
+      * capacity (default): GShard-style static capacity + expert-batched
+        einsum — the paper-faithful baseline, sheds overflow tokens.
+      * ragged (``REPRO_PERF_OPTS=moe_ragged``, beyond-paper): TPU-native
+        ``jax.lax.ragged_dot`` grouped matmul over expert-sorted tokens —
+        no capacity, no drops, no padded (E, C, d) gather buffer.
+    """
+    from repro import perf_flags
+    if perf_flags.flag("moe_ragged"):
+        return moe_apply_ragged(cfg, p, x, router_kind)
+    return moe_apply_capacity(cfg, p, x, router_kind)
+
+
+def _route(cfg: ModelConfig, p, xf, router_kind: str):
+    """Shared router: -> (topw (T,k), tope (T,k), aux scalar)."""
+    m = cfg.moe
+    T = xf.shape[0]
+    E, k = m.num_experts, m.top_k
+    scores = (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    if router_kind == "sigmoid":                     # DeepSeek-V3
+        probs = jax.nn.sigmoid(scores)
+        topw, tope = jax.lax.top_k(probs, k)
+        topw = topw / (topw.sum(-1, keepdims=True) + 1e-9)
+        lb_probs = probs / (probs.sum(-1, keepdims=True) + 1e-9)
+    else:                                            # softmax (Qwen3-MoE)
+        probs = jax.nn.softmax(scores, axis=-1)
+        topw, tope = jax.lax.top_k(probs, k)
+        topw = topw / (topw.sum(-1, keepdims=True) + 1e-9)
+        lb_probs = probs
+    onehot = jax.nn.one_hot(tope, E, dtype=jnp.float32)           # (T,k,E)
+    frac_tokens = onehot.sum((0, 1)) / (T * k)
+    aux = m.router_aux_coef * E * jnp.sum(frac_tokens * lb_probs.mean(0))
+    return topw, tope, aux
+
+
+def moe_apply_ragged(cfg: ModelConfig, p, x, router_kind: str = "softmax"):
+    """Grouped-matmul dispatch via jax.lax.ragged_dot (beyond-paper)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, k = m.num_experts, m.top_k
+    xf = x.reshape(T, d)
+    topw, tope, aux = _route(cfg, p, xf, router_kind)
+
+    e_flat = tope.reshape(-1)
+    t_flat = jnp.repeat(jnp.arange(T), k)
+    w_flat = topw.reshape(-1)
+    order = jnp.argsort(e_flat)
+    st, sw = t_flat[order], w_flat[order]
+    sizes = jnp.bincount(e_flat, length=E).astype(jnp.int32)
+
+    rows = xf[st]                                                 # (T*k, d)
+    h = jax.lax.ragged_dot(rows, p["wi"].astype(x.dtype), sizes)
+    if cfg.activation in ("swiglu", "geglu"):
+        g = jax.lax.ragged_dot(rows, p["wg"].astype(x.dtype), sizes)
+        act = jax.nn.silu if cfg.activation == "swiglu" else \
+            (lambda t: jax.nn.gelu(t, approximate=True))
+        h = act(g) * h
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    eo = jax.lax.ragged_dot(h, p["wo"].astype(x.dtype), sizes)    # (T*k, d)
+    eo = eo * sw[:, None].astype(eo.dtype)
+    out = jnp.zeros((T, d), eo.dtype).at[st].add(eo)
+    if "shared" in p:
+        out = out + L.ffn_apply(cfg, p["shared"], xf)
+    return out.reshape(B, S, d), aux
+
+
+def moe_apply_capacity(cfg: ModelConfig, p, x,
+                       router_kind: str = "softmax"):
+    """x: (B, S, d) -> (out (B,S,d), aux_loss scalar)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, k = m.num_experts, m.top_k
+    C = _capacity(T, cfg)
+    xf = x.reshape(T, d)
+
+    scores = (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    if router_kind == "sigmoid":                     # DeepSeek-V3
+        probs = jax.nn.sigmoid(scores)
+        topw, tope = jax.lax.top_k(probs, k)
+        topw = topw / (topw.sum(-1, keepdims=True) + 1e-9)
+        lb_probs = probs / (probs.sum(-1, keepdims=True) + 1e-9)
+    else:                                            # softmax (Qwen3-MoE)
+        probs = jax.nn.softmax(scores, axis=-1)
+        topw, tope = jax.lax.top_k(probs, k)
+        topw = topw / (topw.sum(-1, keepdims=True) + 1e-9)
+        lb_probs = probs
+
+    # ---- load-balance aux loss ------------------------------------------
+    onehot = jax.nn.one_hot(tope, E, dtype=jnp.float32)           # (T,k,E)
+    frac_tokens = onehot.sum((0, 1)) / (T * k)                    # f_e
+    mean_prob = lb_probs.mean(0)                                  # P_e
+    aux = m.router_aux_coef * E * jnp.sum(frac_tokens * mean_prob)
+
+    # ---- sort-based dispatch --------------------------------------------
+    e_flat = tope.reshape(-1)                                     # (T*k,)
+    t_flat = jnp.repeat(jnp.arange(T), k)
+    w_flat = topw.reshape(-1)
+    order = jnp.argsort(e_flat)
+    se, st, sw = e_flat[order], t_flat[order], w_flat[order]
+    counts = jnp.bincount(e_flat, length=E)
+    offsets = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                               jnp.cumsum(counts)[:-1]])
+    pos_in_e = jnp.arange(T * k) - offsets[se]
+    keep = pos_in_e < C
+    slot = jnp.where(keep, se * C + pos_in_e, E * C)              # overflow slot
+
+    table = jnp.full((E * C + 1,), T, jnp.int32).at[slot].set(st.astype(jnp.int32))
+    wtab = jnp.zeros((E * C + 1,), jnp.float32).at[slot].set(sw)
+    table, wtab = table[:-1].reshape(E, C), wtab[:-1].reshape(E, C)
+
+    xpad = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)])     # sentinel row
+    gathered = xpad[table]                                        # (E, C, d)
+
+    # ---- expert compute (expert axis shards over `model`) ---------------
+    h = jnp.einsum("ecd,edf->ecf", gathered, p["wi"].astype(x.dtype))
+    if cfg.activation in ("swiglu", "geglu"):
+        g = jnp.einsum("ecd,edf->ecf", gathered, p["wg"].astype(x.dtype))
+        act = jax.nn.silu if cfg.activation == "swiglu" else \
+            (lambda t: jax.nn.gelu(t, approximate=True))
+        h = act(g) * h
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    eo = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(x.dtype))   # (E, C, d)
+
+    # ---- combine ----------------------------------------------------------
+    eo = eo * wtab[..., None].astype(eo.dtype)
+    out = jnp.zeros((T + 1, d), eo.dtype).at[table.reshape(-1)].add(
+        eo.reshape(-1, d))[:T]
+
+    if "shared" in p:
+        out = out + L.ffn_apply(cfg, p["shared"], xf)
+    return out.reshape(B, S, d), aux

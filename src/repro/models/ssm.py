@@ -1,0 +1,388 @@
+"""Recurrent mixers: xLSTM (mLSTM + sLSTM) and a Mamba-style selective SSM.
+
+TPU adaptation (see DESIGN.md §3): the GPU reference implementations of
+these models use fused CUDA scans.  Here the parallelizable ones (mLSTM,
+Mamba branch) run in *chunkwise* form — intra-chunk quadratic matmuls that
+map onto the MXU, inter-chunk state carried through a ``lax.scan`` — which
+is the TPU-native realization of the same recurrence.  sLSTM has a true
+hidden-to-hidden dependency and runs as a time scan.
+
+Each mixer exposes:
+    *_apply(cfg, p, x, state, mode)  ->  (y, new_state)
+with ``mode`` in {"train", "prefill", "decode"}; states are fp32 and act as
+the KV-cache generalization for attention-free layers (paper pillar P1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+CHUNK = 128
+
+
+def mlstm_zero_state(cfg: ModelConfig, batch: int):
+    H, dh = cfg.num_heads, (2 * cfg.d_model) // cfg.num_heads
+    return {"C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, H, dh), jnp.float32),
+            "m": jnp.zeros((batch, H), jnp.float32)}
+
+
+def slstm_zero_state(cfg: ModelConfig, batch: int):
+    H, dh = cfg.num_heads, cfg.d_model // cfg.num_heads
+    z = lambda *s: jnp.zeros(s, jnp.float32)
+    return {"c": z(batch, H, dh), "n": z(batch, H, dh),
+            "h": z(batch, H, dh), "m": z(batch, H)}
+
+
+def mamba_zero_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    return (jnp.zeros((batch, di, s.state_size), jnp.float32),
+            jnp.zeros((batch, s.conv_size - 1, di), dtype))
+
+
+def _pad_to(x, mult, axis):
+    s = x.shape[axis]
+    pad = (-s) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+# ===========================================================================
+# mLSTM (xLSTM matrix-memory block)
+# ===========================================================================
+
+
+def mlstm_init(rng, cfg: ModelConfig):
+    d = cfg.d_model
+    di = 2 * d
+    H = cfg.num_heads
+    ks = jax.random.split(rng, 8)
+    return {
+        "w_up": L.dense_init(ks[0], d, di),
+        "w_gate": L.dense_init(ks[1], d, di),
+        "wq": L.dense_init(ks[2], di, di),
+        "wk": L.dense_init(ks[3], di, di),
+        "wv": L.dense_init(ks[4], di, di),
+        "w_if": L.dense_init(ks[5], di, 2 * H),
+        "b_if": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]),
+        "out_norm": {"w": jnp.zeros((di,))},
+        "w_down": L.dense_init(ks[6], di, d),
+    }
+
+
+def _mlstm_qkvgates(cfg, p, x):
+    B, S, d = x.shape
+    H = cfg.num_heads
+    xi = x @ p["w_up"].astype(x.dtype)
+    z = x @ p["w_gate"].astype(x.dtype)
+    di = xi.shape[-1]
+    dh = di // H
+    q = (xi @ p["wq"].astype(x.dtype)).reshape(B, S, H, dh)
+    k = (xi @ p["wk"].astype(x.dtype)).reshape(B, S, H, dh) * dh ** -0.5
+    v = (xi @ p["wv"].astype(x.dtype)).reshape(B, S, H, dh)
+    gates = (xi.astype(jnp.float32) @ p["w_if"].astype(jnp.float32)
+             + p["b_if"])
+    i_pre, f_pre = gates[..., :H], gates[..., H:]                 # (B,S,H)
+    logf = jax.nn.log_sigmoid(f_pre)
+    return q, k, v, i_pre, logf, z
+
+
+def mlstm_chunked(q, k, v, i_pre, logf, state):
+    """Chunkwise-parallel stabilized mLSTM.
+
+    q,k,v: (B,S,H,dh); i_pre/logf: (B,S,H) fp32.
+    state: {"C": (B,H,dh,dh), "n": (B,H,dh), "m": (B,H)} fp32.
+    Returns h (B,S,H,dh) fp32 and the final state.
+    """
+    B, S, H, dh = q.shape
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    (qf, pad), (kf, _), (vf, _) = (_pad_to(t, CHUNK, 1) for t in (qf, kf, vf))
+    i_pre, _ = _pad_to(i_pre, CHUNK, 1)
+    logf, _ = _pad_to(logf, CHUNK, 1)
+    # padded steps: make them no-ops (f=1 -> logf=0, i=-inf)
+    if pad:
+        Sp = qf.shape[1]
+        step_ok = jnp.arange(Sp) < S
+        logf = jnp.where(step_ok[None, :, None], logf, 0.0)
+        i_pre = jnp.where(step_ok[None, :, None], i_pre, -1e30)
+    nchunk = qf.shape[1] // CHUNK
+
+    def to_chunks(t):
+        return t.reshape(B, nchunk, CHUNK, *t.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc, ic, fc = map(to_chunks, (qf, kf, vf, i_pre, logf))
+
+    tri = jnp.tril(jnp.ones((CHUNK, CHUNK), bool))                # j <= i
+
+    def step(carry, blk):
+        C_p, n_p, m_p = carry                                     # prev state
+        qb, kb, vb, ib, fb = blk                                  # (B,L,H,...)
+        F = jnp.cumsum(fb, axis=1)                                # (B,L,H)
+        Ftot = F[:, -1]                                           # (B,H)
+        # intra-chunk log weights: F_i - F_j + i_j   (B,H,L,L)
+        logw = (F.transpose(0, 2, 1)[:, :, :, None]
+                - F.transpose(0, 2, 1)[:, :, None, :]
+                + ib.transpose(0, 2, 1)[:, :, None, :])
+        logw = jnp.where(tri, logw, -jnp.inf)
+        # state path log decay per position: F_i + m_prev
+        logst = F.transpose(0, 2, 1) + m_p[:, :, None]            # (B,H,L)
+        m_i = jnp.maximum(jnp.max(logw, axis=-1), logst)          # (B,H,L)
+        m_i = jnp.where(jnp.isfinite(m_i), m_i, 0.0)
+        w = jnp.exp(logw - m_i[..., None])                        # (B,H,L,L)
+        st_w = jnp.exp(logst - m_i)                               # (B,H,L)
+
+        scores = jnp.einsum("blhd,bmhd->bhlm", qb, kb) * w
+        num = (jnp.einsum("bhlm,bmhd->bhld", scores, vb)
+               + st_w[..., None] * jnp.einsum("blhd,bhde->bhle", qb, C_p))
+        den = scores.sum(-1) + st_w * jnp.einsum("blhd,bhd->bhl", qb, n_p)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[..., None]
+        h = h.transpose(0, 2, 1, 3)                               # (B,L,H,dh)
+
+        # ---- state update to chunk end --------------------------------
+        m_new = jnp.maximum(m_p + Ftot,
+                            jnp.max(Ftot[:, None] - F + ib, axis=1))
+        decay_state = jnp.exp(m_p + Ftot - m_new)                 # (B,H)
+        wk_end = jnp.exp(Ftot[:, None] - F + ib - m_new[:, None]) # (B,L,H)
+        C_n = (decay_state[..., None, None] * C_p
+               + jnp.einsum("blh,blhd,blhe->bhde", wk_end, kb, vb))
+        n_n = (decay_state[..., None] * n_p
+               + jnp.einsum("blh,blhd->bhd", wk_end, kb))
+        return (C_n, n_n, m_new), h
+
+    carry0 = (state["C"], state["n"], state["m"])
+    (C_f, n_f, m_f), hs = jax.lax.scan(step, carry0, (qc, kc, vc, ic, fc))
+    h = hs.swapaxes(0, 1).reshape(B, nchunk * CHUNK, H, dh)[:, :S]
+    return h, {"C": C_f, "n": n_f, "m": m_f}
+
+
+def mlstm_step(q, k, v, i_pre, logf, state):
+    """Single-token recurrent update. q,k,v: (B,1,H,dh)."""
+    qf, kf, vf = (t[:, 0].astype(jnp.float32) for t in (q, k, v))
+    ib, fb = i_pre[:, 0], logf[:, 0]                              # (B,H)
+    C_p, n_p, m_p = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(fb + m_p, ib)
+    fw = jnp.exp(fb + m_p - m_new)
+    iw = jnp.exp(ib - m_new)
+    C_n = fw[..., None, None] * C_p + iw[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", kf, vf)
+    n_n = fw[..., None] * n_p + iw[..., None] * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf, C_n)
+    den = jnp.einsum("bhd,bhd->bh", qf, n_n)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    return h[:, None], {"C": C_n, "n": n_n, "m": m_new}
+
+
+def mlstm_apply(cfg: ModelConfig, p, x, state, mode: str):
+    B, S, d = x.shape
+    H = cfg.num_heads
+    q, k, v, i_pre, logf, z = _mlstm_qkvgates(cfg, p, x)
+    if mode == "decode":
+        h, new_state = mlstm_step(q, k, v, i_pre, logf, state)
+    else:
+        from repro.kernels import ops as kops
+        out = kops.maybe_mlstm_chunked(q, k, v, i_pre, logf, state)
+        if out is not None:
+            h, new_state = out
+        else:
+            h, new_state = mlstm_chunked(q, k, v, i_pre, logf, state)
+    di = z.shape[-1]
+    h = h.reshape(B, S, di).astype(x.dtype)
+    h = L.rmsnorm(h, p["out_norm"]["w"])
+    out = (h * jax.nn.silu(z)) @ p["w_down"].astype(x.dtype)
+    return out, new_state
+
+
+# ===========================================================================
+# sLSTM (xLSTM scalar-memory block) — true recurrence, time scan
+# ===========================================================================
+
+
+def slstm_init(rng, cfg: ModelConfig):
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    ks = jax.random.split(rng, 4)
+    return {
+        "w_in": L.dense_init(ks[0], d, 4 * d),                    # i,f,z,o
+        "r": (jax.random.normal(ks[1], (H, dh, 4 * dh)) * dh ** -0.5),
+        "b": jnp.concatenate([jnp.zeros((d,)), 3.0 * jnp.ones((d,)),
+                              jnp.zeros((2 * d,))]),
+        "out_norm": {"w": jnp.zeros((d,))},
+        "w_out": L.dense_init(ks[2], d, d),
+    }
+
+
+def _slstm_cell(cfg, p, wx_t, st):
+    """wx_t: (B,4d) input preactivations; st: dict of (B,H,dh)."""
+    H = cfg.num_heads
+    B = wx_t.shape[0]
+    d = wx_t.shape[-1] // 4
+    dh = d // H
+    rec = jnp.einsum("bhd,hde->bhe", st["h"], p["r"].astype(jnp.float32))
+    pre = wx_t.reshape(B, 4, H, dh).transpose(0, 2, 1, 3).reshape(B, H, 4 * dh)
+    pre = pre + rec + p["b"].reshape(4, H, dh).transpose(1, 0, 2).reshape(
+        H, 4 * dh)
+    i_pre, f_pre, z_pre, o_pre = jnp.split(pre, 4, axis=-1)       # (B,H,dh)
+    logf = jax.nn.log_sigmoid(f_pre)
+    # one stabilizer per head (shared across dims): exact for any choice,
+    # numerically safe when >= the per-dim max.
+    m_prev = st["m"][:, :, None]                                  # (B,H,1)
+    m_new = jnp.maximum(logf + m_prev, i_pre).max(-1)             # (B,H)
+    fw = jnp.exp(logf + m_prev - m_new[..., None])
+    iw = jnp.exp(i_pre - m_new[..., None])
+    c = fw * st["c"] + iw * jnp.tanh(z_pre)
+    n = fw * st["n"] + iw
+    h = jax.nn.sigmoid(o_pre) * c / jnp.maximum(n, 1e-6)
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def slstm_apply(cfg: ModelConfig, p, x, state, mode: str):
+    B, S, d = x.shape
+    H = cfg.num_heads
+    dh = d // H
+    wx = x.astype(jnp.float32) @ p["w_in"].astype(jnp.float32)    # (B,S,4d)
+
+    if mode == "decode":
+        st = _slstm_cell(cfg, p, wx[:, 0], state)
+        h_seq = st["h"][:, None]                                  # (B,1,H,dh)
+        new_state = st
+    else:
+        def step(st, wx_t):
+            st = _slstm_cell(cfg, p, wx_t, st)
+            return st, st["h"]
+
+        new_state, hs = jax.lax.scan(step, state, wx.swapaxes(0, 1))
+        h_seq = hs.swapaxes(0, 1)                                 # (B,S,H,dh)
+
+    h = h_seq.reshape(B, -1, d).astype(x.dtype)
+    h = L.rmsnorm(h, p["out_norm"]["w"])
+    return h @ p["w_out"].astype(x.dtype), new_state
+
+
+# ===========================================================================
+# Mamba-style selective SSM branch (Hymba hybrid heads)
+# ===========================================================================
+# Scalar-decay-per-head (Mamba-2 form) so the recurrence runs chunkwise on
+# the MXU; see DESIGN.md for why this TPU adaptation replaces the Mamba-1
+# diagonal-per-channel CUDA scan.
+
+
+def mamba_init(rng, cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    Hs = s.num_ssm_heads or cfg.num_heads
+    ks = jax.random.split(rng, 7)
+    return {
+        "w_in": L.dense_init(ks[0], d, di),
+        "w_gate": L.dense_init(ks[1], d, di),
+        "conv": jax.random.normal(ks[2], (s.conv_size, di)) * 0.2,
+        "w_bc": L.dense_init(ks[3], di, 2 * s.state_size),
+        "w_dt": L.dense_init(ks[4], di, Hs),
+        "dt_bias": jnp.zeros((Hs,)),
+        "a_log": jnp.log(jnp.linspace(1.0, float(Hs), Hs)),
+        "skip_d": jnp.ones((Hs,)),
+        "out_norm": {"w": jnp.zeros((di,))},
+        "w_out": L.dense_init(ks[5], di, d),
+    }
+
+
+def _causal_conv(x, w, conv_state):
+    """Depthwise causal conv. x: (B,S,di), w: (K,di), conv_state: (B,K-1,di)."""
+    K = w.shape[0]
+    xc = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    out = sum(xc[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+              for i in range(K))
+    new_state = xc[:, -(K - 1):] if K > 1 else conv_state
+    return out, new_state
+
+
+def mamba_apply(cfg: ModelConfig, p, x, state, conv_state, mode: str):
+    """Selective SSM. state: (B, di, N) fp32 -> reshaped (B,Hs,dh,N)."""
+    s = cfg.ssm
+    B, S, d = x.shape
+    di = s.expand * d
+    Hs = s.num_ssm_heads or cfg.num_heads
+    dh = di // Hs
+    N = s.state_size
+
+    xi = x @ p["w_in"].astype(x.dtype)
+    z = x @ p["w_gate"].astype(x.dtype)
+    xi, new_conv = _causal_conv(xi, p["conv"], conv_state)
+    xi = jax.nn.silu(xi)
+
+    bc = xi @ p["w_bc"].astype(x.dtype)
+    Bt, Ct = bc[..., :N].astype(jnp.float32), bc[..., N:].astype(jnp.float32)
+    dt = jax.nn.softplus(xi.astype(jnp.float32) @ p["w_dt"] + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])                                      # (Hs,) < 0
+    logdec = dt * a                                               # (B,S,Hs)
+    xh = xi.astype(jnp.float32).reshape(B, S, Hs, dh)
+    h_state = state.reshape(B, Hs, dh, N)
+
+    if mode == "decode":
+        dec = jnp.exp(logdec[:, 0])                               # (B,Hs)
+        upd = jnp.einsum("bhd,bn,bh->bhdn", xh[:, 0], Bt[:, 0], dt[:, 0])
+        h_new = dec[..., None, None] * h_state + upd
+        y = jnp.einsum("bhdn,bn->bhd", h_new, Ct[:, 0])[:, None]  # (B,1,Hs,dh)
+        h_final = h_new
+    else:
+        y, h_final = _mamba_chunked(xh, Bt, Ct, dt, logdec, h_state)
+
+    y = y + xh[:, :y.shape[1]] * p["skip_d"][:, None]
+    y = y.reshape(B, -1, di).astype(x.dtype)
+    y = L.rmsnorm(y, p["out_norm"]["w"])
+    out = (y * jax.nn.silu(z)) @ p["w_out"].astype(x.dtype)
+    return out, h_final.reshape(B, di, N), new_conv
+
+
+def _mamba_chunked(xh, Bt, Ct, dt, logdec, h0):
+    """Chunkwise linear recurrence.  xh: (B,S,H,dh), Bt/Ct: (B,S,N),
+    dt/logdec: (B,S,H), h0: (B,H,dh,N)."""
+    B, S, H, dh = xh.shape
+    N = Bt.shape[-1]
+    (xh, pad), (Bt, _), (Ct, _) = (_pad_to(t, CHUNK, 1) for t in (xh, Bt, Ct))
+    dt, _ = _pad_to(dt, CHUNK, 1)
+    logdec, _ = _pad_to(logdec, CHUNK, 1)
+    if pad:
+        ok = jnp.arange(xh.shape[1]) < S
+        dt = jnp.where(ok[None, :, None], dt, 0.0)
+        logdec = jnp.where(ok[None, :, None], logdec, 0.0)
+    nchunk = xh.shape[1] // CHUNK
+
+    def to_chunks(t):
+        return t.reshape(B, nchunk, CHUNK, *t.shape[2:]).swapaxes(0, 1)
+
+    xc, bc, cc, dc, lc = map(to_chunks, (xh, Bt, Ct, dt, logdec))
+    tri = jnp.tril(jnp.ones((CHUNK, CHUNK), bool))
+
+    def step(h_p, blk):
+        xb, bb, cb, db, lb = blk
+        F = jnp.cumsum(lb, axis=1)                                # (B,L,H)
+        Ftot = F[:, -1]
+        # intra: w_ij = exp(F_i - F_j) dt_j, j <= i
+        logw = (F.transpose(0, 2, 1)[..., :, None]
+                - F.transpose(0, 2, 1)[..., None, :])             # (B,H,L,L)
+        w = jnp.where(tri, jnp.exp(logw), 0.0)
+        scores = jnp.einsum("bln,bmn->blm", cb, bb)[:, None] * w \
+            * db.transpose(0, 2, 1)[:, :, None, :]                # (B,H,L,L)
+        y_intra = jnp.einsum("bhlm,bmhd->blhd", scores, xb)
+        y_state = jnp.einsum("bln,bhdn,blh->blhd", cb, h_p,
+                             jnp.exp(F))
+        # state to chunk end
+        wk = jnp.exp(Ftot[:, None] - F) * db                      # (B,L,H)
+        upd = jnp.einsum("blh,blhd,bln->bhdn", wk, xb, bb)
+        h_n = jnp.exp(Ftot)[..., None, None] * h_p + upd
+        return h_n, y_intra + y_state
+
+    h_f, ys = jax.lax.scan(step, h0, (xc, bc, cc, dc, lc))
+    y = ys.swapaxes(0, 1).reshape(B, nchunk * CHUNK, H, dh)[:, :S]
+    return y, h_f

@@ -1,0 +1,424 @@
+"""Unified decoder over stacks of repeating layer patterns.
+
+Every assigned architecture — dense, MoE(+MLA), xLSTM, Hymba hybrid, VLM and
+audio backbones — is this one module driven by its :class:`ModelConfig`.
+Layer stacks run as ``lax.scan`` over pattern repeats (HLO stays the size of
+one pattern), with caches carried as scan xs/ys for prefill/decode.
+
+Entry points:
+    init_params(rng, cfg, policy)
+    forward_train(params, cfg, tokens, ...)   -> (logits, aux)
+    forward_prefill(params, cfg, tokens, ...) -> (logits, cache)
+    forward_decode(params, cfg, tokens, ...)  -> (logits, cache)
+    init_cache(cfg, batch, max_len, dtype)    -> cache pytree
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ATTN, DENSE_FFN, HYBRID, MLA, MLSTM, MOE_FFN,
+                                NO_FFN, SLSTM, LayerSpec, ModelConfig, Stack)
+from repro.core import kv_cache as KV
+from repro.core.precision import FP32, Policy
+from repro.models import attention_mla as MLAT
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def layer_init(rng, cfg: ModelConfig, spec: LayerSpec):
+    ks = jax.random.split(rng, 6)
+    p = {"norm1": L.norm_init(cfg)}
+    if spec.mixer == ATTN:
+        p["attn"] = L.attn_init(ks[0], cfg)
+    elif spec.mixer == MLA:
+        p["attn"] = MLAT.mla_init(ks[0], cfg)
+    elif spec.mixer == MLSTM:
+        p["mixer"] = SSM.mlstm_init(ks[0], cfg)
+    elif spec.mixer == SLSTM:
+        p["mixer"] = SSM.slstm_init(ks[0], cfg)
+    elif spec.mixer == HYBRID:
+        p["attn"] = L.attn_init(ks[0], cfg)
+        p["mamba"] = SSM.mamba_init(ks[1], cfg)
+        p["bn_attn"] = L.norm_init(cfg)
+        p["bn_ssm"] = L.norm_init(cfg)
+    if cfg.sandwich_norm:
+        p["norm1_post"] = L.norm_init(cfg)
+    if spec.ffn != NO_FFN:
+        p["norm2"] = L.norm_init(cfg)
+        p["ffn"] = (L.ffn_init(ks[2], cfg) if spec.ffn == DENSE_FFN
+                    else MOE.moe_init(ks[2], cfg))
+        if cfg.sandwich_norm:
+            p["norm2_post"] = L.norm_init(cfg)
+    return p
+
+
+def _stack_init(rng, cfg: ModelConfig, stack: Stack):
+    out = []
+    for pi, spec in enumerate(stack.pattern):
+        keys = jax.random.split(jax.random.fold_in(rng, pi), stack.repeats)
+        out.append(jax.vmap(lambda k, s=spec: layer_init(k, cfg, s))(keys))
+    return tuple(out)
+
+
+def mtp_init(rng, cfg: ModelConfig):
+    ks = jax.random.split(rng, 3)
+    return {"norm_h": L.norm_init(cfg), "norm_e": L.norm_init(cfg),
+            "proj": L.dense_init(ks[0], 2 * cfg.d_model, cfg.d_model),
+            "layer": layer_init(ks[1], cfg, LayerSpec(mixer=ATTN,
+                                                      ffn=DENSE_FFN))}
+
+
+def init_params(rng, cfg: ModelConfig, policy: Policy = FP32):
+    ks = jax.random.split(rng, len(cfg.stacks) + 3)
+    params = {
+        "embed": L.embed_params_init(ks[0], cfg),
+        "final_norm": L.norm_init(cfg),
+        "stacks": tuple(_stack_init(ks[2 + i], cfg, s)
+                        for i, s in enumerate(cfg.stacks)),
+    }
+    if cfg.mtp:
+        params["mtp"] = mtp_init(ks[1], cfg)
+    return policy.cast_params(params)
+
+
+# ---------------------------------------------------------------------------
+# Cache
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    """Allocate the full model cache (stacked over scan repeats)."""
+    layers = []
+    for stack in cfg.stacks:
+        per_pos = []
+        for spec in stack.pattern:
+            one = KV.layer_cache_shape(cfg, spec, batch, max_len, dtype)
+            per_pos.append(jax.tree.map(
+                lambda a, r=stack.repeats: jnp.tile(
+                    a[None], (r,) + (1,) * a.ndim), one))
+        layers.append(tuple(per_pos))
+    return {"layers": tuple(layers)}
+
+
+def cache_struct(cfg: ModelConfig, batch: int, max_len: int,
+                 dtype=jnp.bfloat16):
+    """ShapeDtypeStruct version (no allocation) for dry-run lowering."""
+    return jax.eval_shape(
+        functools.partial(init_cache, cfg, batch, max_len, dtype))
+
+
+# ---------------------------------------------------------------------------
+# One layer
+# ---------------------------------------------------------------------------
+
+
+def layer_apply(cfg: ModelConfig, spec: LayerSpec, p, x, *, positions,
+                cache_pos, cache, mode: str, max_len: int,
+                attend_cache: bool = False):
+    """Returns (x, new_cache, aux). cache is None in train mode.
+    attend_cache: prefill continues from a pre-filled cache (prefix
+    caching) — queries attend to cache contents, not just in-context k/v.
+    """
+    aux = jnp.zeros((), jnp.float32)
+    B, S, _ = x.shape
+    window = KV.effective_window(cfg, spec, max_len)
+    h = L.apply_norm(cfg, p["norm1"], x)
+    new_cache = None
+
+    # ----- mixer ----------------------------------------------------------
+    if spec.mixer in (ATTN, HYBRID):
+        theta = (cfg.rope_theta_local
+                 if (window is not None and cfg.rope_theta_local is not None)
+                 else cfg.rope_theta)
+        q, k, v = L.attn_qkv(cfg, p["attn"], h, positions, theta=theta)
+        scale = L.attn_scale(cfg)
+        if mode == "decode":
+            c_attn = {n: cache[n] for n in ("k", "v", "pos")}
+            c_attn = KV.write_decode(c_attn, {"k": k, "v": v}, positions[:, 0])
+            ctx = L.mha_attention(q, c_attn["k"].astype(x.dtype),
+                                  c_attn["v"].astype(x.dtype),
+                                  positions, c_attn["pos"], window=window,
+                                  scale=scale, attn_softcap=cfg.attn_softcap)
+        elif mode == "prefill" and attend_cache:
+            c_attn = KV.write_prefill(
+                {n: cache[n] for n in ("k", "v", "pos")},
+                {"k": k, "v": v}, cache_pos)
+            ctx = L.mha_attention(q, c_attn["k"].astype(x.dtype),
+                                  c_attn["v"].astype(x.dtype),
+                                  positions, c_attn["pos"], window=window,
+                                  scale=scale, attn_softcap=cfg.attn_softcap)
+        else:
+            ctx = L.mha_attention(q, k, v, positions, positions,
+                                  window=window, scale=scale,
+                                  attn_softcap=cfg.attn_softcap)
+            c_attn = None
+            if mode == "prefill":
+                c_attn = KV.write_prefill(
+                    {n: cache[n] for n in ("k", "v", "pos")},
+                    {"k": k, "v": v}, cache_pos)
+        mixer_out = L.attn_out(cfg, p["attn"], ctx)
+
+        if spec.mixer == HYBRID:
+            if mode == "train":
+                ssm_state, conv_state = SSM.mamba_zero_state(cfg, B, x.dtype)
+            else:
+                ssm_state, conv_state = cache["ssm"], cache["conv"]
+            ssm_out, ssm_state, conv_state = SSM.mamba_apply(
+                cfg, p["mamba"], h, ssm_state, conv_state, mode)
+            mixer_out = 0.5 * (L.apply_norm(cfg, p["bn_attn"], mixer_out)
+                               + L.apply_norm(cfg, p["bn_ssm"], ssm_out))
+            if mode != "train":
+                new_cache = dict(c_attn)
+                new_cache["ssm"] = ssm_state
+                new_cache["conv"] = conv_state
+        else:
+            new_cache = c_attn
+
+    elif spec.mixer == MLA:
+        if mode == "decode":
+            mixer_out, new_cache = MLAT.mla_decode(cfg, p["attn"], h, cache,
+                                                   positions[:, 0])
+        elif mode == "prefill" and attend_cache:
+            mixer_out, new_cache = MLAT.mla_prefill_cached(
+                cfg, p["attn"], h, cache, positions, cache_pos,
+                window=window)
+        else:
+            mixer_out, to_cache = MLAT.mla_full(cfg, p["attn"], h, positions,
+                                                positions, window=window)
+            if mode == "prefill":
+                new_cache = KV.write_prefill(cache, to_cache, cache_pos)
+
+    elif spec.mixer in (MLSTM, SLSTM):
+        fn = SSM.mlstm_apply if spec.mixer == MLSTM else SSM.slstm_apply
+        zero = (SSM.mlstm_zero_state if spec.mixer == MLSTM
+                else SSM.slstm_zero_state)
+        state = zero(cfg, B) if mode == "train" else cache
+        mixer_out, state = fn(cfg, p["mixer"], h, state, mode)
+        if mode != "train":
+            new_cache = state
+    else:
+        raise ValueError(spec.mixer)
+
+    if cfg.sandwich_norm:
+        mixer_out = L.apply_norm(cfg, p["norm1_post"], mixer_out)
+    x = x + mixer_out
+
+    # ----- ffn -------------------------------------------------------------
+    if spec.ffn != NO_FFN:
+        h2 = L.apply_norm(cfg, p["norm2"], x)
+        if spec.ffn == DENSE_FFN:
+            out = L.ffn_apply(cfg, p["ffn"], h2)
+        else:
+            kind = "sigmoid" if cfg.mla is not None else "softmax"
+            out, moe_aux = MOE.moe_apply(cfg, p["ffn"], h2, kind)
+            aux = aux + moe_aux
+        if cfg.sandwich_norm:
+            out = L.apply_norm(cfg, p["norm2_post"], out)
+        x = x + out
+
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Stack runner (scan over repeats)
+# ---------------------------------------------------------------------------
+
+
+def _run_stack(cfg, stack: Stack, stack_p, stack_c, x, *, positions,
+               cache_pos, mode, max_len, remat, attend_cache=False):
+    has_cache = mode != "train"
+
+    def body(carry, xs):
+        xx, aux = carry
+        if has_cache:
+            p_r, c_r = xs
+        else:
+            (p_r,) = xs
+            c_r = (None,) * len(stack.pattern)
+        new_cs = []
+        for pi, spec in enumerate(stack.pattern):
+            xx, nc, a = layer_apply(cfg, spec, p_r[pi], xx,
+                                    positions=positions, cache_pos=cache_pos,
+                                    cache=c_r[pi], mode=mode, max_len=max_len,
+                                    attend_cache=attend_cache)
+            new_cs.append(nc)
+            aux = aux + a
+        return (xx, aux), (tuple(new_cs) if has_cache else None)
+
+    if remat and mode == "train":
+        body = jax.checkpoint(body)
+
+    xs = (stack_p, stack_c) if has_cache else (stack_p,)
+    (x, aux), new_cache = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                       xs)
+    return x, new_cache, aux
+
+
+def _run_all(cfg, params, x, *, positions, cache_pos, cache, mode, max_len,
+             remat=False, attend_cache=False):
+    new_layers = []
+    aux = jnp.zeros((), jnp.float32)
+    for si, stack in enumerate(cfg.stacks):
+        sc = cache["layers"][si] if cache is not None else None
+        x, nc, a = _run_stack(cfg, stack, params["stacks"][si], sc, x,
+                              positions=positions, cache_pos=cache_pos,
+                              mode=mode, max_len=max_len, remat=remat,
+                              attend_cache=attend_cache)
+        new_layers.append(nc)
+        aux = aux + a
+    new_cache = {"layers": tuple(new_layers)} if cache is not None else None
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Embedding plumbing
+# ---------------------------------------------------------------------------
+
+
+def _embed(cfg, params, tokens, prefix_embeds, positions, policy):
+    x = L.embed_tokens(cfg, params, tokens)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    if cfg.pos_emb == "learned":
+        pe = params["embed"]["pos"]
+        x = x + jnp.take(pe, jnp.clip(positions, 0, pe.shape[0] - 1),
+                         axis=0).astype(x.dtype)
+    elif cfg.pos_emb == "sinusoidal":
+        d = cfg.d_model
+        half = d // 2
+        freqs = jnp.exp(-jnp.arange(half) / half * jnp.log(10000.0))
+        ang = positions[..., None].astype(jnp.float32) * freqs
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+        x = x + pe.astype(x.dtype)
+    x = x.astype(policy.compute_dtype)
+    return _maybe_seq_parallel(x)
+
+
+def _maybe_seq_parallel(x):
+    """seq_parallel (§Perf): shard the token/sequence dim of activations
+    over the `model` axis instead of tensor-parallel weights — the right
+    scheme when head counts don't divide the TP degree (GSPMD would
+    otherwise reshard full activations around every per-head op).  The
+    constraint propagates through the whole stack; attention gathers K/V
+    across the axis as needed."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro import perf_flags
+    from repro.sharding import partition as SH
+    if not perf_flags.flag("seq_parallel"):
+        return x
+    mesh = SH.current_mesh()
+    if (mesh is None or "model" not in mesh.axis_names
+            or x.shape[1] % mesh.shape["model"] != 0):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(None, "model", None)))
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
+def forward_train(params, cfg: ModelConfig, tokens, *, prefix_embeds=None,
+                  policy: Policy = FP32, remat: bool = True):
+    """tokens: (B,S) int32 (or (B,S,C) audio). Returns (logits, aux dict)."""
+    B = tokens.shape[0]
+    S = tokens.shape[1] + (prefix_embeds.shape[1] if prefix_embeds is not None
+                           else 0)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = _embed(cfg, params, tokens, prefix_embeds, positions, policy)
+    x, _, aux = _run_all(cfg, params, x, positions=positions, cache_pos=None,
+                         cache=None, mode="train", max_len=S, remat=remat)
+    h_final = L.apply_norm(cfg, params["final_norm"], x)
+    logits = policy.output_cast(L.unembed(cfg, params, h_final))
+    aux_d = {"moe_aux": aux}
+    if cfg.mtp and "mtp" in params:
+        aux_d["mtp_logits"] = _mtp_forward(params, cfg, x, tokens, positions,
+                                           policy)
+    return logits, aux_d
+
+
+def _mtp_forward(params, cfg, h, tokens, positions, policy):
+    """DeepSeek multi-token prediction: predict t_{i+2} from h_i + emb_{i+1}."""
+    p = params["mtp"]
+    emb_next = L.embed_tokens(cfg, params, tokens[:, 1:]).astype(h.dtype)
+    h_cur = h[:, :-1]
+    merged = jnp.concatenate(
+        [L.apply_norm(cfg, p["norm_h"], h_cur),
+         L.apply_norm(cfg, p["norm_e"], emb_next)], axis=-1)
+    x = merged @ p["proj"].astype(h.dtype)
+    x, _, _ = layer_apply(cfg, LayerSpec(ATTN, DENSE_FFN), p["layer"], x,
+                          positions=positions[:, :-1], cache_pos=None,
+                          cache=None, mode="train",
+                          max_len=positions.shape[1])
+    h_final = L.apply_norm(cfg, params["final_norm"], x)
+    return policy.output_cast(L.unembed(cfg, params, h_final))
+
+
+def forward_prefill(params, cfg: ModelConfig, tokens, prompt_lengths, cache,
+                    *, prefix_embeds=None, policy: Policy = FP32,
+                    max_len: Optional[int] = None, last_only: bool = False,
+                    start: int = 0):
+    """Process full (right-padded) prompts, fill the cache.
+
+    prompt_lengths: (B,) valid token count per row *including* prefix
+    embeddings but *excluding* ``start``.  ``start`` > 0 continues from a
+    pre-filled cache (prefix caching: the paper's "extract content
+    offline" applied to a shared prompt's KV).  Returns
+    (logits (B,S,V), cache) — or (B,1,V) when ``last_only`` (production
+    serving: unembed only the sampled position, which for a 262k vocab
+    saves terabytes of logits at 32k prefill).
+    """
+    B = tokens.shape[0]
+    S = tokens.shape[1] + (prefix_embeds.shape[1] if prefix_embeds is not None
+                           else 0)
+    max_len = max_len or _cache_max_len(cfg, cache)
+    positions = start + jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    cache_pos = jnp.where(positions < start + prompt_lengths[:, None],
+                          positions, -1)
+    x = _embed(cfg, params, tokens, prefix_embeds, positions, policy)
+    x, cache, _ = _run_all(cfg, params, x, positions=positions,
+                           cache_pos=cache_pos, cache=cache, mode="prefill",
+                           max_len=max_len, attend_cache=start > 0)
+    if last_only:
+        x = jnp.take_along_axis(
+            x, (prompt_lengths - 1)[:, None, None].astype(jnp.int32), axis=1)
+    h_final = L.apply_norm(cfg, params["final_norm"], x)
+    logits = policy.output_cast(L.unembed(cfg, params, h_final))
+    return logits, cache
+
+
+def forward_decode(params, cfg: ModelConfig, tokens, cache, lengths, *,
+                   policy: Policy = FP32, max_len: Optional[int] = None):
+    """One new token per slot. tokens: (B,1); lengths: (B,) current context
+    length (the new token's absolute position). Returns (logits, cache)."""
+    B = tokens.shape[0]
+    max_len = max_len or _cache_max_len(cfg, cache)
+    positions = lengths[:, None]
+    x = _embed(cfg, params, tokens, None, positions, policy)
+    x, cache, _ = _run_all(cfg, params, x, positions=positions,
+                           cache_pos=None, cache=cache, mode="decode",
+                           max_len=max_len)
+    h_final = L.apply_norm(cfg, params["final_norm"], x)
+    logits = policy.output_cast(L.unembed(cfg, params, h_final))
+    return logits, cache
+
+
+def _cache_max_len(cfg: ModelConfig, cache) -> int:
+    """Recover the max_len the cache was built with (largest pos dim - 1)."""
+    best = 0
+    for stack_c in cache["layers"]:
+        for c in stack_c:
+            if isinstance(c, dict) and "pos" in c:
+                best = max(best, c["pos"].shape[-1] - 1)
+    return best or cfg.max_seq_len

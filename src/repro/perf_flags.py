@@ -1,0 +1,65 @@
+"""Perf-experiment switches (EXPERIMENTS.md §Perf).
+
+The hillclimb loop needs to lower the *same* model with and without a
+candidate optimization, from subprocess-driven dry-runs.  Flags live in the
+``REPRO_PERF_OPTS`` env var (comma-separated, ``key`` or ``key=value``) so
+they propagate to dry-run subprocesses without touching the config system:
+
+  attn_bf16       compute attention scores/PV from half-precision inputs
+                  with fp32 MXU accumulation (no materialized fp32 cast of
+                  the KV cache)
+  tp_attn_guard   replicate attention weights when head counts don't
+                  divide the TP degree (prevents GSPMD full-activation
+                  reshards on e.g. 14-head models at TP=16)
+  bf16_params     train giant (>100B) archs with bf16 parameter storage
+  factored_opt    Adafactor-style factored second moment for giant archs
+  grad_accum=N    split the train batch into N sequentially-accumulated
+                  microbatches
+  coll_bf16       cast fp32 activation tensors to bf16 before cross-chip
+                  collectives (halves collective bytes)
+
+Winning flags are promoted to defaults at the end of the perf pass; the
+paper-faithful baseline is always recoverable with REPRO_PERF_OPTS="".
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, Optional
+
+# flags promoted to default after §Perf validation.  attn_bf16 is the
+# paper-faithful choice (FasterTransformer computes attention in fp16 with
+# fp32 accumulation); REPRO_PERF_OPTS="" still recovers the pre-promotion
+# fp32-cast baseline.
+_DEFAULTS_ON = ("attn_bf16",)
+
+
+def _parse() -> Dict[str, str]:
+    raw = os.environ.get("REPRO_PERF_OPTS")
+    out = {k: "1" for k in _DEFAULTS_ON}
+    if raw is None:
+        return out
+    if raw.strip() == "":
+        return {}                     # explicit empty = pure baseline
+    out = {}
+    for part in raw.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        if "=" in part:
+            k, v = part.split("=", 1)
+            out[k] = v
+        else:
+            out[part] = "1"
+    return out
+
+
+def flag(name: str) -> bool:
+    return name in _parse()
+
+
+def flag_value(name: str, default: Optional[str] = None) -> Optional[str]:
+    return _parse().get(name, default)
+
+
+def active() -> Dict[str, str]:
+    return _parse()

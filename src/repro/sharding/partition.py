@@ -1,0 +1,193 @@
+"""Sharding rules: parameter/activation/cache PartitionSpecs.
+
+Baseline scheme (DESIGN.md §6):
+  * Megatron tensor parallelism over the ``model`` axis: column-parallel
+    up-projections (wq/wk/wv/wi/wg/wuq/wukv/w_up/w_in...), row-parallel
+    down-projections (wo/w_down/w_out).
+  * Expert parallelism: MoE expert stacks shard their expert axis over
+    ``model``.
+  * Data parallel over ``data`` (and ``pod`` across pods); optional FSDP
+    shards the non-TP dim of large matrices over ``data``.
+  * Caches: batch over (pod, data) when divisible; for single-stream
+    long-context decode the KV sequence dim shards over ``data``
+    (context parallelism).
+
+Stacked (scan-repeated) parameters carry a leading repeats axis which is
+never sharded — rules are expressed over *trailing* dims.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+# rule: leaf name -> spec over trailing dims, with "fsdp" placeholders
+_COL = (("fsdp", "model"), 2)            # (in, out): out dim TP
+_ROW = (("model", "fsdp"), 2)            # (in, out): in dim TP
+_REP2 = ((None, None), 2)
+
+_RULES = {
+    # attention / dense ffn / mla / mlstm / mamba projections
+    "wq": _COL, "wk": _COL, "wv": _COL, "wi": _COL, "wg": _COL,
+    "wuq": _COL, "wukv": _COL, "w_up": _COL, "w_gate": _COL, "w_in": _COL,
+    "w_if": _REP2, "w_bc": (("model", None), 2), "w_dt": (("model", None), 2),
+    "wo": _ROW, "w_down": _ROW, "w_out": _ROW,
+    "wdq": (("fsdp", None), 2), "wdkv": (("fsdp", None), 2),
+    "wkr": _REP2, "proj": _COL, "router": ((None, "model"), 2),
+}
+
+# MoE expert stacks: (E, in, out) trailing dims; expert axis over model.
+_MOE_COL = (("model", "fsdp", None), 3)
+_MOE_ROW = (("model", None, "fsdp"), 3)
+
+
+def _leaf_spec(path: Tuple, leaf, fsdp: bool,
+               replicate_attn: bool = False) -> P:
+    names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+    name = names[-1]
+    ndim = len(leaf.shape)
+
+    # tp_attn_guard (§Perf): when head counts don't divide the TP degree,
+    # GSPMD reshuffles full activations around every per-head op; cheaper
+    # to keep attention weights replicated and data-parallel.
+    if replicate_attn and "attn" in names and name in ("wq", "wk", "wv",
+                                                       "wo"):
+        return P(*(None,) * ndim)
+
+    def fill(tpl_ndim_pair):
+        tpl, n = tpl_ndim_pair
+        if ndim < n:
+            return P()
+        spec = tuple(("data" if a == "fsdp" and fsdp else
+                      None if a == "fsdp" else a) for a in tpl)
+        return P(*((None,) * (ndim - n) + spec))
+
+    # embeddings ------------------------------------------------------------
+    if name == "tokens":
+        if ndim == 3:                         # (C, V, d) codebooks
+            return P(None, "model", "data" if fsdp else None)
+        return P("model", "data" if fsdp else None)
+    if name == "heads":
+        return P(None, "model", None)
+    if name == "head":
+        return fill(_COL)
+    if name == "pos":
+        return P()
+
+    # MoE expert stacks: wi/wg/wo with expert + scan-repeat dims (ndim 4);
+    # stacked dense FFN weights are ndim 3 and fall through to _RULES.
+    if name in ("wi", "wg", "wo") and ndim >= 4 and "ffn" in names:
+        return fill(_MOE_COL if name in ("wi", "wg") else _MOE_ROW)
+
+    if name in _RULES:
+        return fill(_RULES[name])
+    return P()                                 # norms, biases, gates, conv, r
+
+
+def param_pspecs(params_tree, cfg: ModelConfig, fsdp: bool = False,
+                 mesh: Mesh = None):
+    """Pytree of PartitionSpec matching ``params_tree`` (arrays or structs)."""
+    from repro import perf_flags
+    replicate_attn = False
+    if mesh is not None and perf_flags.flag("tp_attn_guard"):
+        tp = mesh.shape.get("model", 1)
+        replicate_attn = cfg.num_heads % tp != 0
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_tree)
+    specs = [_leaf_spec(path, leaf, fsdp, replicate_attn)
+             for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# concrete mesh for in-model sharding constraints (seq_parallel); set by
+# the launcher that owns the mesh context.
+_CURRENT_MESH: list = [None]
+
+
+def set_current_mesh(mesh) -> None:
+    _CURRENT_MESH[0] = mesh
+
+
+def current_mesh():
+    return _CURRENT_MESH[0]
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def data_parallel_size(mesh: Mesh) -> int:
+    size = 1
+    for a in batch_axes(mesh):
+        size *= mesh.shape[a]
+    return size
+
+
+def batch_pspec(mesh: Mesh, batch_size: int, extra_dims: int = 1) -> P:
+    """Shard dim0 over (pod, data) when divisible, else replicate."""
+    dp = data_parallel_size(mesh)
+    if batch_size % dp == 0 and batch_size >= dp:
+        return P(batch_axes(mesh), *(None,) * extra_dims)
+    return P(*(None,) * (extra_dims + 1))
+
+
+def cache_pspecs(cache_tree, mesh: Mesh, batch_size: int):
+    """Cache sharding: batch-parallel when possible; otherwise shard the
+    KV sequence dim over ``data`` (context parallelism for long_500k)."""
+    dp = data_parallel_size(mesh)
+    batch_sharded = batch_size % dp == 0 and batch_size >= dp
+    axes = batch_axes(mesh)
+
+    def spec(path, leaf):
+        names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        name = names[-1]
+        ndim = len(leaf.shape)
+        # leading dim is scan repeats, dim1 is batch
+        positional = name in ("k", "v", "ckv", "kr", "pos")
+        if positional and ndim >= 3:
+            # (R, B, S, ...): cache allocations are 256-multiples, so the
+            # sequence dim always shards evenly.
+            seq_ok = leaf.shape[2] % 256 == 0
+            if batch_sharded:
+                seq = "model" if seq_ok else None
+                return P(None, axes, seq, *(None,) * (ndim - 3))
+            seq = (("data", "model") if seq_ok else None)
+            return P(None, None, seq, *(None,) * (ndim - 3))
+        if batch_sharded:
+            return P(None, axes, *(None,) * (ndim - 2))
+        if name == "ssm" and ndim == 4:        # (R, B, d_inner, N)
+            return P(None, None, "model", None)
+        if name == "C" and ndim == 5:          # (R, B, H, dh, dh)
+            return P(None, None, None, "model", None)
+        return P(*(None,) * ndim)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec(p, l) for p, l in flat])
+
+
+def sanitize_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop sharding on dims the mesh axes don't divide evenly (e.g. a
+    32001-row vocab on a 16-way model axis stays replicated)."""
+    out = []
+    for i, axes in enumerate(tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if axes is None:
+            out.append(None)
+            continue
+        alist = axes if isinstance(axes, tuple) else (axes,)
+        size = 1
+        for a in alist:
+            size *= mesh.shape[a]
+        out.append(axes if shape[i] % size == 0 else None)
+    return P(*out)
+
+
+def with_sharding(tree, specs, mesh: Mesh):
+    """Attach NamedShardings to a ShapeDtypeStruct tree (dry-run inputs)."""
+    return jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(
+            s.shape, s.dtype,
+            sharding=NamedSharding(mesh, sanitize_spec(sp, s.shape, mesh))),
+        tree, specs)

@@ -1,0 +1,52 @@
+"""Checkpointing: pytree <-> flat .npz with path-keyed entries."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, params: Any, opt_state: Any = None,
+         meta: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    blob = {f"p:{k}": v for k, v in _flatten(params).items()}
+    if opt_state is not None:
+        blob.update({f"o:{k}": v for k, v in _flatten(opt_state).items()})
+    np.savez(path, **blob)
+    if meta is not None:
+        with open(path + ".meta.json", "w") as f:
+            json.dump(meta, f, indent=2, default=str)
+
+
+def restore(path: str, params_template: Any,
+            opt_template: Any = None) -> Tuple[Any, Any]:
+    """Restore into the structure of the given templates."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+
+    def fill(template, prefix):
+        leaves_p, treedef = jax.tree_util.tree_flatten_with_path(template)
+        out = []
+        for pth, leaf in leaves_p:
+            key = prefix + "/".join(
+                str(getattr(p, "key", getattr(p, "idx", p))) for p in pth)
+            arr = data[key]
+            assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+            out.append(jnp.asarray(arr, dtype=leaf.dtype))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    params = fill(params_template, "p:")
+    opt = fill(opt_template, "o:") if opt_template is not None else None
+    return params, opt

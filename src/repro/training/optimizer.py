@@ -1,0 +1,150 @@
+"""AdamW + LR schedules in pure JAX (no optax dependency).
+
+Two second-moment modes:
+
+  * full      — standard AdamW (default everywhere)
+  * factored  — Adafactor-style: for each >=2-D parameter, the second
+    moment is stored as a row statistic (shape[:-1]) and a column
+    statistic (shape[:-2] + last), reconstructed as
+    ``v_ij ~ r_i * c_j / mean_j'(r)``, and the first moment is dropped.
+    This is the §Perf memory fix for >100B-parameter training on a single
+    16GB-HBM pod: full AdamW state for 671B params simply does not fit
+    (see EXPERIMENTS.md §Perf target B).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+    factored: bool = False
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: object            # pytree like params, or None (factored mode)
+    nu: object            # pytree like params, or tuple of arrays/dicts
+
+
+def init_state(params, moment_dtype=jnp.float32,
+               factored: bool = False) -> AdamWState:
+    """moment_dtype=bf16 is the low-memory mode used for the >100B-param
+    dry-runs (noted in EXPERIMENTS.md); fp32 everywhere else."""
+    step = jnp.zeros((), jnp.int32)
+    if not factored:
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=moment_dtype),
+                             params)
+        return AdamWState(step=step, mu=zeros,
+                          nu=jax.tree.map(jnp.copy, zeros))
+    flat, _ = jax.tree_util.tree_flatten(params)
+    nu = tuple(
+        {"r": jnp.zeros(p.shape[:-1], jnp.float32),
+         "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        if p.ndim >= 2 else jnp.zeros_like(p, dtype=jnp.float32)
+        for p in flat)
+    return AdamWState(step=step, mu=None, nu=nu)
+
+
+def factored_nu_pspecs(param_specs, params_struct):
+    """PartitionSpecs for the factored nu tuple, derived from param specs
+    (drop the dim the statistic reduces over).  Factoring is decided by the
+    *parameter's* rank (matching init_state), not the spec length."""
+    from jax.sharding import PartitionSpec as P
+    flat_s, _ = jax.tree_util.tree_flatten(param_specs)
+    flat_p, _ = jax.tree_util.tree_flatten(params_struct)
+    out = []
+    for spec, p in zip(flat_s, flat_p):
+        t = tuple(spec) + (None,) * (p.ndim - len(tuple(spec)))
+        if p.ndim >= 2:
+            out.append({"r": P(*t[:-1]), "c": P(*(t[:-2] + t[-1:]))})
+        else:
+            out.append(P(*t))
+    return tuple(out)
+
+
+def lr_at(cfg: AdamWConfig, step):
+    """Linear warmup -> cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.lr * (cfg.min_lr_frac
+                    + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(jax.tree.map(
+        lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree))
+    return jnp.sqrt(sum(leaves))
+
+
+def apply_updates(cfg: AdamWConfig, params, grads, state: AdamWState):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+
+    step = state.step + 1
+    lr = lr_at(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def decayed(p, delta):
+        if p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    if not cfg.factored:
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+        mu = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g,
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g,
+                          state.nu, grads)
+
+        def upd(p, m, v):
+            mhat = m.astype(jnp.float32) / b1c
+            vhat = v.astype(jnp.float32) / b2c
+            return decayed(p, mhat / (jnp.sqrt(vhat) + cfg.eps))
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        mu = jax.tree.map(lambda a, b: a.astype(b.dtype), mu, state.mu)
+        nu = jax.tree.map(lambda a, b: a.astype(b.dtype), nu, state.nu)
+        return new_params, AdamWState(step, mu, nu), \
+            {"lr": lr, "gnorm": gnorm}
+
+    # ---- factored (Adafactor-style, no first moment) --------------------
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    new_p, new_nu = [], []
+    for p, g, v in zip(flat_p, flat_g, state.nu):
+        g = g.astype(jnp.float32) * scale
+        g2 = g * g
+        if isinstance(v, dict):
+            r = cfg.b2 * v["r"] + (1 - cfg.b2) * jnp.mean(g2, axis=-1)
+            c = cfg.b2 * v["c"] + (1 - cfg.b2) * jnp.mean(g2, axis=-2)
+            rmean = jnp.mean(r, axis=-1, keepdims=True)
+            vhat = (r[..., :, None] * c[..., None, :]
+                    / jnp.maximum(rmean[..., None], 1e-30)) / b2c
+            new_nu.append({"r": r, "c": c})
+        else:
+            vfull = cfg.b2 * v + (1 - cfg.b2) * g2
+            vhat = vfull / b2c
+            new_nu.append(vfull)
+        new_p.append(decayed(p, g / (jnp.sqrt(vhat) + cfg.eps)))
+    new_params = jax.tree_util.tree_unflatten(treedef, new_p)
+    return new_params, AdamWState(step, None, tuple(new_nu)), \
+        {"lr": lr, "gnorm": gnorm}

@@ -1,0 +1,122 @@
+"""Training step + loop: cross-entropy LM loss, MoE aux, optional MTP."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.precision import MIXED_TRAIN, Policy
+from repro.models import transformer as T
+from repro.training import optimizer as OPT
+
+MTP_WEIGHT = 0.3
+
+
+def cross_entropy(logits, labels, mask):
+    """logits (B,S,V) fp32, labels (B,S) int, mask (B,S) -> mean nats."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def _codebook_ce(logits, labels, mask):
+    """Audio: logits (B,S,C,V), labels (B,S,C)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = ((logz - gold) * mask[..., None]).sum(-1)
+    return nll.sum() / jnp.maximum(mask.sum() * labels.shape[-1], 1.0)
+
+
+def loss_fn(params, cfg: ModelConfig, batch, policy: Policy,
+            remat: bool = True):
+    logits, aux = T.forward_train(
+        params, cfg, batch["tokens"],
+        prefix_embeds=batch.get("prefix_embeds"), policy=policy, remat=remat)
+    labels, mask = batch["labels"], batch["loss_mask"]
+    P = cfg.num_prefix_embeds
+    if P:
+        logits = logits[:, P:]
+    if cfg.num_codebooks:
+        loss = _codebook_ce(logits, labels, mask)
+    else:
+        loss = cross_entropy(logits, labels, mask)
+    total = loss + aux["moe_aux"]
+    if "mtp_logits" in aux:
+        mtp_loss = cross_entropy(aux["mtp_logits"][:, :-1],
+                                 labels[:, 2:], mask[:, 2:])
+        total = total + MTP_WEIGHT * mtp_loss
+    return total, {"ce": loss, "moe_aux": aux["moe_aux"]}
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OPT.AdamWConfig,
+                    policy: Policy = MIXED_TRAIN, remat: bool = True,
+                    grad_accum: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params', state', m).
+
+    grad_accum > 1 (§Perf): the global batch is split into sequentially
+    accumulated microbatches (a lax.scan), dividing activation/logit peak
+    memory by the accumulation factor.  Gradients accumulate in the
+    parameter dtype.
+    """
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn, has_aux=True)(
+            params, cfg, batch, policy, remat)
+
+    def train_step(params, opt_state, batch):
+        if grad_accum == 1:
+            (loss, parts), grads = grads_of(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                    + x.shape[1:]), batch)
+
+            def mb(carry, mbatch):
+                gsum, lsum = carry
+                (loss, parts), g = grads_of(params, mbatch)
+                gsum = jax.tree.map(lambda a, b: a + b.astype(a.dtype),
+                                    gsum, g)
+                return (gsum, lsum + loss), parts
+
+            gz = jax.tree.map(lambda p: jnp.zeros_like(p), params)
+            (gsum, lsum), parts_all = jax.lax.scan(
+                mb, (gz, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / grad_accum, gsum)
+            loss = lsum / grad_accum
+            parts = jax.tree.map(lambda x: x[-1], parts_all)
+        params, opt_state, om = OPT.apply_updates(opt_cfg, params, grads,
+                                                  opt_state)
+        metrics = {"loss": loss, **parts, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, policy: Policy = MIXED_TRAIN):
+    def eval_step(params, batch):
+        loss, parts = loss_fn(params, cfg, batch, policy, remat=False)
+        return {"loss": loss, **parts}
+    return eval_step
+
+
+def train(cfg: ModelConfig, params, batches, *, steps: int,
+          opt_cfg: Optional[OPT.AdamWConfig] = None,
+          policy: Policy = MIXED_TRAIN, log_every: int = 10,
+          callback=None):
+    """Single-host training loop (examples / smoke tests)."""
+    opt_cfg = opt_cfg or OPT.AdamWConfig(total_steps=steps)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, policy))
+    opt_state = OPT.init_state(params)
+    history = []
+    for i in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in next(batches).items()}
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        if i % log_every == 0 or i == steps - 1:
+            m = {k: float(v) for k, v in m.items()}
+            history.append({"step": i, **m})
+            if callback:
+                callback(i, m)
+    return params, opt_state, history

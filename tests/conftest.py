@@ -1,0 +1,21 @@
+import os
+
+# Tests run on the single real CPU device (the dry-run subprocesses force
+# their own placeholder device count; never set it here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)

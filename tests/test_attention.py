@@ -1,0 +1,81 @@
+"""Property tests: chunked flash (lax.scan) attention == naive reference,
+RoPE shift property, masks."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+
+settings.register_profile("ci", deadline=None, max_examples=20)
+settings.load_profile("ci")
+
+
+@st.composite
+def attn_case(draw):
+    B = draw(st.integers(1, 3))
+    Hkv = draw(st.sampled_from([1, 2, 4]))
+    g = draw(st.sampled_from([1, 2, 4]))
+    D = draw(st.sampled_from([8, 16, 32]))
+    Sq = draw(st.integers(1, 48))
+    Sk = draw(st.integers(1, 80))
+    window = draw(st.sampled_from([None, 8, 32]))
+    seed = draw(st.integers(0, 2 ** 31))
+    return B, Hkv, g, D, Sq, Sk, window, seed
+
+
+@given(attn_case())
+def test_chunked_equals_ref(case):
+    B, Hkv, g, D, Sq, Sk, window, seed = case
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(B, Sq, Hkv * g, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Sk, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Sk, Hkv, D)), jnp.float32)
+    # arbitrary valid/invalid positions
+    kp = jnp.asarray(rng.integers(-1, Sk, size=(B, Sk)), jnp.int32)
+    qp = jnp.asarray(rng.integers(0, Sk + 4, size=(B, Sq)), jnp.int32)
+    ref = L.attention_ref(q, k, v, qp, kp, window=window, scale=D ** -0.5)
+    chunk = L.attention_chunked(q, k, v, qp, kp, window=window,
+                                scale=D ** -0.5, block=16)
+    np.testing.assert_allclose(np.asarray(chunk), np.asarray(ref),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_rope_relative_shift():
+    """RoPE inner products depend only on relative positions."""
+    rng = np.random.default_rng(0)
+    D = 32
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, 1, D)), jnp.float32)
+
+    def score(pq, pk):
+        qr = L.rope(q, jnp.array([[pq]]), 10000.0)
+        kr = L.rope(k, jnp.array([[pk]]), 10000.0)
+        return float(jnp.sum(qr * kr))
+
+    assert abs(score(5, 3) - score(105, 103)) < 1e-3
+    assert abs(score(7, 0) - score(1007, 1000)) < 1e-3
+
+
+def test_softcap_bounds():
+    x = jnp.linspace(-1000, 1000, 101)
+    y = L.softcap(x, 50.0)
+    assert float(jnp.max(jnp.abs(y))) <= 50.0
+    np.testing.assert_allclose(np.asarray(L.softcap(x, None)),
+                               np.asarray(x))
+
+
+@given(st.integers(0, 2 ** 31), st.sampled_from([None, 4, 16]))
+def test_position_mask_properties(seed, window):
+    rng = np.random.default_rng(seed)
+    B, Sq, Sk = 2, 8, 12
+    qp = jnp.asarray(rng.integers(0, 20, size=(B, Sq)), jnp.int32)
+    kp = jnp.asarray(rng.integers(-1, 20, size=(B, Sk)), jnp.int32)
+    m = np.asarray(L.position_mask(qp, kp, window))
+    qpn, kpn = np.asarray(qp), np.asarray(kp)
+    for b in range(B):
+        for i in range(Sq):
+            for j in range(Sk):
+                expect = kpn[b, j] >= 0 and kpn[b, j] <= qpn[b, i]
+                if window is not None:
+                    expect = expect and kpn[b, j] > qpn[b, i] - window
+                assert m[b, i, j] == expect

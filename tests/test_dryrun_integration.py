@@ -1,0 +1,86 @@
+"""Dry-run path integration: lower+compile on a small forced-device mesh
+in a subprocess (so the test session's device count stays 1), plus the
+roofline readers over real artifacts."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+import json
+import numpy as np
+import jax
+from jax.sharding import Mesh
+
+import repro.launch.specs as SP
+import repro.launch.hlo_analysis as HA
+from repro.configs.registry import get_reduced
+from repro.sharding import partition as SH
+
+# shrink the input shapes to smoke scale
+SP.INPUT_SHAPES = {
+    "train_4k": {"kind": "train", "seq": 64, "batch": 8},
+    "decode_32k": {"kind": "decode", "seq": 512, "batch": 8},
+}
+
+mesh = Mesh(np.asarray(jax.devices()).reshape(4, 4), ("data", "model"))
+SH.set_current_mesh(mesh)
+out = {}
+for arch in ["qwen3-4b", "deepseek-v3-671b", "xlstm-125m"]:
+    cfg = get_reduced(arch).replace(vocab_size=512)
+    for shape in ["train_4k", "decode_32k"]:
+        t = SP.make_target(cfg, shape, mesh)
+        with mesh:
+            comp = jax.jit(t.fn, donate_argnums=t.donate_argnums).lower(
+                *t.args).compile()
+        ha = HA.analyze(comp.as_text())
+        out[f"{arch}|{shape}"] = {
+            "flops": ha["flops"], "bytes": ha["bytes"],
+            "coll": ha["collectives"]["total_bytes"]}
+print(json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_dryrun_small_mesh_all_families():
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"),
+               REPRO_PERF_OPTS="")
+    r = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stderr[-3000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert len(out) == 6
+    for key, v in out.items():
+        assert v["flops"] > 0, key
+        assert v["bytes"] > 0, key
+        # sharded graphs must actually communicate
+        if "train" in key:
+            assert v["coll"] > 0, key
+
+
+def test_roofline_reader_on_artifacts():
+    from benchmarks import roofline
+    recs = roofline.load_records(
+        os.path.join(ROOT, "experiments", "dryrun"), mesh=None)
+    if not recs:
+        pytest.skip("no dry-run artifacts present")
+    rows = roofline.table(recs)
+    assert rows, "no analyzable records"
+    for t in rows:
+        assert t["dominant"] in ("compute", "memory", "collective")
+        assert t["compute_s"] >= 0 and t["memory_s"] > 0
+
+
+def test_report_sections():
+    from benchmarks import report
+    recs_dir = os.path.join(ROOT, "experiments", "dryrun")
+    if not os.listdir(recs_dir):
+        pytest.skip("no artifacts")
+    md = report.roofline_section()
+    assert "| arch |" in md and "dominant" in md.lower()

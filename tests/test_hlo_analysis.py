@@ -1,0 +1,95 @@
+"""The trip-count-aware HLO analyzer that feeds the roofline tables."""
+import jax
+import jax.numpy as jnp
+
+from repro.launch import hlo_analysis as HA
+
+
+def _flops(fn, *args):
+    hlo = jax.jit(fn).lower(*args).compile().as_text()
+    return HA.analyze(hlo)
+
+
+def test_single_matmul_flops():
+    x = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+    w = jax.ShapeDtypeStruct((512, 128), jnp.float32)
+    res = _flops(lambda a, b: a @ b, x, w)
+    assert res["flops"] == 2 * 256 * 512 * 128
+    assert res["n_dots"] == 1
+
+
+def test_scan_multiplies_by_trip_count():
+    """The exact failure mode of raw cost_analysis: scan bodies count once.
+    Our analyzer must multiply by the trip count."""
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((12, 128, 128), jnp.float32)
+
+    def f(x, ws):
+        y, _ = jax.lax.scan(lambda c, w: (c @ w, None), x, ws)
+        return y
+
+    res = _flops(f, x, ws)
+    one = 2 * 128 * 128 * 128
+    assert abs(res["flops"] - 12 * one) / (12 * one) < 0.05, res["flops"]
+
+
+def test_nested_scan():
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((3, 64, 64), jnp.float32)
+
+    def inner(c, w):
+        def body(c2, _):
+            return c2 @ w, None
+        y, _ = jax.lax.scan(body, c, None, length=5)
+        return y, None
+
+    def f(x, ws):
+        y, _ = jax.lax.scan(inner, x, ws)
+        return y
+
+    res = _flops(f, x, ws)
+    one = 2 * 64 * 64 * 64
+    assert abs(res["flops"] - 15 * one) / (15 * one) < 0.05, res["flops"]
+
+
+def test_bytes_nonzero_and_scaled():
+    x = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+
+    def f(a):
+        return (a * 2.0 + 1.0).sum()
+
+    res = _flops(f, x)
+    # at least one read of the 4MB input
+    assert res["bytes"] >= 4 * 1024 * 1024
+
+
+def test_collective_parse_synthetic():
+    hlo = """
+HloModule test
+
+%cond (p: (s32[], f32[4])) -> pred[] {
+  %p = (s32[], f32[4]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%body (p: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %p = (s32[], f32[4]) parameter(0)
+  %x = f32[4] get-tuple-element(%p), index=1
+  %ar = f32[4]{0} all-reduce(%x), replica_groups={}, to_apply=%add
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %t = (s32[], f32[4]) tuple(%i, %ar)
+}
+
+ENTRY %main (a: f32[4]) -> f32[4] {
+  %a = f32[4] parameter(0)
+  %ag = f32[8]{0} all-gather(%a), dimensions={0}
+  %w = (s32[], f32[4]) while(%init), condition=%cond, body=%body
+  ROOT %r = f32[4] get-tuple-element(%w), index=1
+}
+"""
+    res = HA.analyze(hlo)
+    per = res["collectives"]["per_op_bytes"]
+    assert per["all-gather"] == 32            # 8 * 4B, once
+    assert per["all-reduce"] == 7 * 16        # 4 * 4B, 7 trips

@@ -1,0 +1,86 @@
+"""Precision policies (paper P1: FP16 inference) + training substrate."""
+import os
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_reduced
+from repro.core.precision import BF16, FP16, FP32, get_policy
+from repro.data.pipeline import packed_batches, synthetic_corpus
+from repro.core.tokenizer import FastTokenizer
+from repro.models import transformer as T
+from repro.training import checkpoint as CKPT
+from repro.training import optimizer as OPT
+from repro.training.train_loop import train
+
+
+def test_policy_casting(key):
+    cfg = get_reduced("qwen3-4b")
+    params = T.init_params(key, cfg)
+    p16 = FP16.cast_params(params)
+    dt = {str(x.dtype) for x in jax.tree.leaves(p16)}
+    assert dt == {"float16"}
+    assert get_policy("bf16") is BF16
+
+
+def test_half_precision_close_to_fp32(key, rng):
+    """The paper's claim: FP16 inference preserves quality. Logits must
+    stay close and the greedy argmax must agree on a decisive model."""
+    cfg = get_reduced("qwen3-4b")
+    params = T.init_params(key, cfg)
+    toks = jnp.asarray(rng.integers(4, cfg.vocab_size, size=(2, 12)),
+                       jnp.int32)
+    lg32, _ = T.forward_train(params, cfg, toks, policy=FP32, remat=False)
+    for pol in (FP16, BF16):
+        ph = pol.cast_params(params)
+        lgh, _ = T.forward_train(ph, cfg, toks, policy=pol, remat=False)
+        assert lgh.dtype == jnp.float32            # logits stay fp32
+        err = float(jnp.max(jnp.abs(lgh - lg32)))
+        scale = float(jnp.max(jnp.abs(lg32))) + 1e-6
+        assert err / scale < 0.12, f"{pol}: {err/scale}"
+        agree = float(jnp.mean((jnp.argmax(lgh, -1)
+                                == jnp.argmax(lg32, -1)).astype(jnp.float32)))
+        assert agree > 0.7
+
+
+def test_loss_decreases(key):
+    cfg = get_reduced("unimo-text").replace(vocab_size=256)
+    corpus = synthetic_corpus(300, seed=1)
+    tok = FastTokenizer.train(corpus, 256)
+    params = T.init_params(key, cfg)
+    batches = packed_batches(tok, corpus, batch_size=4, seq_len=32)
+    _, _, hist = train(cfg, params, batches, steps=30, policy=FP32,
+                       log_every=29)
+    assert hist[-1]["loss"] < hist[0]["loss"] - 0.3
+
+
+def test_lr_schedule():
+    c = OPT.AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+    lrs = [float(OPT.lr_at(c, jnp.asarray(s))) for s in
+           [0, 5, 10, 50, 100]]
+    assert lrs[0] < lrs[1] < lrs[2]
+    assert abs(lrs[2] - 1e-3) < 1e-8   # fp32 peak-lr roundoff
+    assert lrs[4] >= c.lr * c.min_lr_frac - 1e-9
+    assert lrs[3] < lrs[2]
+
+
+def test_grad_clip(key, rng):
+    cfg = get_reduced("unimo-text")
+    params = T.init_params(key, cfg)
+    grads = jax.tree.map(lambda p: jnp.ones_like(p) * 100.0, params)
+    st = OPT.init_state(params)
+    _, _, m = OPT.apply_updates(OPT.AdamWConfig(grad_clip=1.0), params,
+                                grads, st)
+    assert float(m["gnorm"]) > 1.0   # reported pre-clip norm
+
+
+def test_checkpoint_roundtrip(key, tmp_path):
+    cfg = get_reduced("gemma2-2b")
+    params = T.init_params(key, cfg)
+    st = OPT.init_state(params)
+    path = os.path.join(tmp_path, "ck.npz")
+    CKPT.save(path, params, st, meta={"arch": cfg.name})
+    p2, st2 = CKPT.restore(path, params, st)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert os.path.exists(path + ".meta.json")

@@ -1,0 +1,109 @@
+"""Embedding pruning (paper P2): exact-logit invariance + map properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.registry import get_reduced
+from repro.core import pruning as PR
+from repro.core.precision import FP32
+from repro.models import transformer as T
+
+settings.register_profile("prune", deadline=None, max_examples=15)
+settings.load_profile("prune")
+
+
+@pytest.mark.parametrize("arch", ["unimo-text", "phi3-mini-3.8b"])
+def test_kept_token_logits_invariant(arch, rng, key):
+    """Pruned model's logits == unpruned logits at kept vocab entries,
+    for prompts made of kept tokens (tied and untied heads)."""
+    cfg = get_reduced(arch)
+    params = T.init_params(key, cfg)
+    freqs = {i: 1000 - i for i in range(300)}
+    p2, cfg2, maps = PR.prune_model(params, cfg, freqs, max_vocab=128)
+    assert cfg2.vocab_size == maps.new_vocab
+
+    toks = jnp.asarray(rng.choice(maps.keep_ids[:100], size=(2, 8)),
+                       jnp.int32)
+    lg1, _ = T.forward_train(params, cfg, toks, policy=FP32, remat=False)
+    lg2, _ = T.forward_train(p2, cfg2,
+                             jnp.asarray(PR.remap_tokens(np.asarray(toks),
+                                                         maps)),
+                             policy=FP32, remat=False)
+    np.testing.assert_allclose(
+        np.asarray(lg1)[:, :, maps.keep_ids], np.asarray(lg2),
+        rtol=1e-5, atol=1e-5)
+
+
+def test_position_trim_invariance(rng, key):
+    """The paper's 512->128 trim: outputs identical for seqs <= 128."""
+    cfg = get_reduced("unimo-text")
+    params = T.init_params(key, cfg)
+    p2, cfg2 = PR.trim_positions(params, cfg, 32)
+    assert p2["embed"]["pos"].shape[0] == 32
+    toks = jnp.asarray(rng.integers(4, cfg.vocab_size, size=(2, 16)),
+                       jnp.int32)
+    lg1, _ = T.forward_train(params, cfg, toks, policy=FP32, remat=False)
+    lg2, _ = T.forward_train(p2, cfg2, toks, policy=FP32, remat=False)
+    np.testing.assert_allclose(np.asarray(lg1), np.asarray(lg2),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_trim_positions_noop_for_rope(key):
+    cfg = get_reduced("qwen3-4b")
+    params = T.init_params(key, cfg)
+    p2, cfg2 = PR.trim_positions(params, cfg, 32)
+    assert cfg2.max_seq_len == cfg.max_seq_len       # documented no-op
+
+
+@given(st.integers(0, 2 ** 31), st.integers(8, 64))
+def test_map_roundtrip(seed, keep_n):
+    rng = np.random.default_rng(seed)
+    V = 256
+    freqs = {int(i): int(c) for i, c in
+             enumerate(rng.integers(0, 1000, size=V))}
+    keep = PR.select_keep_ids(freqs, V, max_vocab=keep_n)
+    maps = PR.build_maps(keep, V)
+    assert len(maps.keep_ids) >= 4                  # specials always kept
+    # roundtrip over kept ids
+    kept = maps.keep_ids
+    round1 = PR.unmap_tokens(PR.remap_tokens(kept, maps), maps)
+    np.testing.assert_array_equal(round1, kept)
+    # non-kept ids map to UNK's new id
+    dropped = np.setdiff1d(np.arange(V), kept)
+    if len(dropped):
+        unk_new = maps.old_to_new[1]
+        assert (maps.old_to_new[dropped] == unk_new).all()
+
+
+@given(st.integers(0, 2 ** 31), st.floats(0.1, 0.999))
+def test_coverage_selection(seed, coverage):
+    rng = np.random.default_rng(seed)
+    V = 128
+    counts = rng.zipf(1.5, size=V).astype(np.int64)
+    freqs = {int(i): int(c) for i, c in enumerate(counts)}
+    keep = PR.select_keep_ids(freqs, V, coverage=coverage)
+    kept_mass = counts[keep].sum() / counts.sum()
+    assert kept_mass >= coverage - 1e-9
+
+
+def test_engine_pruned_equivalence(rng, key):
+    """Engine with a pruned model produces the same generations (greedy)
+    when the pruned vocab covers the sampled tokens."""
+    from repro.core.engine import InferenceEngine
+    cfg = get_reduced("unimo-text")
+    params = T.init_params(key, cfg)
+    # keep ~everything that matters: top 1500 of 1600
+    freqs = {i: 10_000 - i for i in range(cfg.vocab_size)}
+    p2, cfg2, maps = PR.prune_model(params, cfg, freqs,
+                                    max_vocab=cfg.vocab_size - 50)
+    toks = np.asarray(rng.integers(4, 1000, size=(2, 8)), np.int32)
+    lens = np.array([8, 5], np.int32)
+    e1 = InferenceEngine(cfg, params, policy=FP32, max_len=48)
+    e2 = InferenceEngine(cfg2, p2, policy=FP32, max_len=48, prune_maps=maps)
+    g1 = e1.generate_batch(toks.copy(), lens.copy(), 6)
+    g2 = e2.generate_batch(toks.copy(), lens.copy(), 6)
+    keep = set(int(i) for i in maps.keep_ids)
+    if all(int(t) in keep for t in g1[g1 >= 0]):
+        np.testing.assert_array_equal(g1, g2)

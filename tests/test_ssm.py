@@ -1,0 +1,116 @@
+"""Recurrent mixers: chunkwise-parallel forms must equal step-by-step
+recurrence (the invariant that makes the state a valid KV-cache analogue)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_reduced
+from repro.models import ssm as S
+
+
+def _mk_qkv(rng, B, T, H, dh):
+    q = jnp.asarray(rng.normal(size=(B, T, H, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, T, H, dh)), jnp.float32) * dh ** -0.5
+    v = jnp.asarray(rng.normal(size=(B, T, H, dh)), jnp.float32)
+    i_pre = jnp.asarray(rng.normal(size=(B, T, H)), jnp.float32)
+    logf = jax.nn.log_sigmoid(
+        jnp.asarray(rng.normal(size=(B, T, H)) + 2.0, jnp.float32))
+    return q, k, v, i_pre, logf
+
+
+@pytest.mark.parametrize("T", [1, 7, 128, 200])
+def test_mlstm_chunked_equals_recurrent(rng, T):
+    B, H, dh = 2, 2, 16
+    q, k, v, i_pre, logf = _mk_qkv(rng, B, T, H, dh)
+    state0 = {"C": jnp.zeros((B, H, dh, dh)), "n": jnp.zeros((B, H, dh)),
+              "m": jnp.zeros((B, H))}
+    h_par, st_par = S.mlstm_chunked(q, k, v, i_pre, logf, state0)
+
+    st = state0
+    outs = []
+    for t in range(T):
+        h, st = S.mlstm_step(q[:, t:t+1], k[:, t:t+1], v[:, t:t+1],
+                             i_pre[:, t:t+1], logf[:, t:t+1], st)
+        outs.append(h[:, 0])
+    h_rec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(h_par), np.asarray(h_rec),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(
+        np.asarray(st_par["C"] * jnp.exp(st_par["m"])[..., None, None]),
+        np.asarray(st["C"] * jnp.exp(st["m"])[..., None, None]),
+        rtol=2e-3, atol=2e-3)
+
+
+def test_mlstm_prefill_then_decode_continuity(rng):
+    """prefill(T) state + decode steps == full parallel over T+n."""
+    B, H, dh, T, n = 1, 2, 16, 50, 5
+    q, k, v, i_pre, logf = _mk_qkv(rng, B, T + n, H, dh)
+    z = {"C": jnp.zeros((B, H, dh, dh)), "n": jnp.zeros((B, H, dh)),
+         "m": jnp.zeros((B, H))}
+    h_full, _ = S.mlstm_chunked(q, k, v, i_pre, logf, z)
+    _, st = S.mlstm_chunked(q[:, :T], k[:, :T], v[:, :T], i_pre[:, :T],
+                            logf[:, :T], z)
+    for t in range(T, T + n):
+        h, st = S.mlstm_step(q[:, t:t+1], k[:, t:t+1], v[:, t:t+1],
+                             i_pre[:, t:t+1], logf[:, t:t+1], st)
+        np.testing.assert_allclose(np.asarray(h[:, 0]),
+                                   np.asarray(h_full[:, t]),
+                                   rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("T", [1, 9, 130])
+def test_mamba_chunked_equals_recurrent(rng, T):
+    B, H, dh, N = 2, 3, 8, 4
+    xh = jnp.asarray(rng.normal(size=(B, T, H, dh)), jnp.float32)
+    Bt = jnp.asarray(rng.normal(size=(B, T, N)), jnp.float32)
+    Ct = jnp.asarray(rng.normal(size=(B, T, N)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.5, size=(B, T, H)), jnp.float32)
+    a = -jnp.asarray(rng.uniform(0.5, 2.0, size=(H,)), jnp.float32)
+    logdec = dt * a
+    h0 = jnp.zeros((B, H, dh, N))
+    y_par, h_par = S._mamba_chunked(xh, Bt, Ct, dt, logdec, h0)
+
+    h = h0
+    ys = []
+    for t in range(T):
+        dec = jnp.exp(logdec[:, t])
+        upd = jnp.einsum("bhd,bn,bh->bhdn", xh[:, t], Bt[:, t], dt[:, t])
+        h = dec[..., None, None] * h + upd
+        ys.append(jnp.einsum("bhdn,bn->bhd", h, Ct[:, t]))
+    y_rec = jnp.stack(ys, 1)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_rec),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h_par), np.asarray(h),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_slstm_scan_equals_stepping(rng, key):
+    cfg = get_reduced("xlstm-125m")
+    p = S.slstm_init(key, cfg)
+    B, T = 2, 12
+    x = jnp.asarray(rng.normal(size=(B, T, cfg.d_model)), jnp.float32) * 0.3
+    st0 = S.slstm_zero_state(cfg, B)
+    y_scan, st_scan = S.slstm_apply(cfg, p, x, st0, "prefill")
+    st = st0
+    ys = []
+    for t in range(T):
+        y, st = S.slstm_apply(cfg, p, x[:, t:t+1], st, "decode")
+        ys.append(y[:, 0])
+    np.testing.assert_allclose(np.asarray(y_scan),
+                               np.asarray(jnp.stack(ys, 1)),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mlstm_no_nan_extreme_gates(rng):
+    """Exponential gating must stay finite for extreme preactivations."""
+    B, T, H, dh = 1, 64, 2, 8
+    q, k, v, _, _ = _mk_qkv(rng, B, T, H, dh)
+    i_pre = jnp.asarray(rng.normal(size=(B, T, H)) * 30, jnp.float32)
+    logf = jax.nn.log_sigmoid(
+        jnp.asarray(rng.normal(size=(B, T, H)) * 30, jnp.float32))
+    z = {"C": jnp.zeros((B, H, dh, dh)), "n": jnp.zeros((B, H, dh)),
+         "m": jnp.zeros((B, H))}
+    h, st = S.mlstm_chunked(q, k, v, i_pre, logf, z)
+    assert bool(jnp.isfinite(h).all())
+    assert bool(jnp.isfinite(st["m"]).all())

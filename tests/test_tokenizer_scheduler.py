@@ -1,0 +1,84 @@
+"""Faster-Tokenizer + dynamic batching properties (paper P4)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scheduler import (DEFAULT_BUCKETS, DynamicBatcher, Request,
+                                  pad_batch, pick_bucket)
+from repro.core.tokenizer import EOS, PAD, UNK, FastTokenizer
+
+settings.register_profile("tok", deadline=None, max_examples=30)
+settings.load_profile("tok")
+
+WORDS = st.text(alphabet="abcdef ", min_size=0, max_size=60)
+
+
+def _tok():
+    corpus = ["abc abcd ab a b c d", "abc abc ffff", "dead beef face"]
+    return FastTokenizer.train(corpus, 64)
+
+
+@given(WORDS)
+def test_decode_encode_roundtrip_chars(text):
+    """Every encoded id decodes back; text made of known chars roundtrips
+    up to whitespace tokenization."""
+    tok = _tok()
+    ids = tok.encode(text, bos=False)
+    out = tok.decode(ids)
+    assert UNK not in ids or any(ch not in "abcdef " for ch in text)
+    if all(ch in "abcdef " for ch in text):
+        assert out == text
+
+
+def test_longest_match_priority():
+    tok = _tok()
+    ids = tok.encode("abcd", bos=False)
+    assert ids == [tok.token_to_id["abcd"]]
+    ids2 = tok.encode("abce", bos=False)
+    assert ids2[0] == tok.token_to_id["abc"]
+
+
+def test_frequency_counting():
+    tok = _tok()
+    freq = tok.count_frequencies(["abc abc abc", "ffff"])
+    abc = tok.token_to_id["abc"]
+    assert freq[abc] == 3
+
+
+@given(st.lists(st.integers(1, 4000), min_size=1, max_size=40),
+       st.integers(1, 8))
+def test_batcher_covers_all_requests(lengths, max_batch):
+    b = DynamicBatcher(max_batch=max_batch)
+    for i, ln in enumerate(lengths):
+        b.add(Request(uid=i, tokens=list(range(ln))))
+    seen = []
+    while True:
+        batch = b.next_batch()
+        if batch is None:
+            break
+        assert batch.size <= max_batch
+        for r in batch.requests:
+            # every request fits its batch's padded bucket
+            assert r.prompt_len <= batch.padded_len \
+                or batch.padded_len == DEFAULT_BUCKETS[-1]
+            seen.append(r.uid)
+    assert sorted(seen) == list(range(len(lengths)))
+
+
+@given(st.integers(1, 5000))
+def test_bucket_monotone(length):
+    b = pick_bucket(length, DEFAULT_BUCKETS)
+    assert b in DEFAULT_BUCKETS
+    if length <= DEFAULT_BUCKETS[-1]:
+        assert b >= length
+
+
+def test_pad_batch_shapes():
+    b = DynamicBatcher(max_batch=4)
+    for i, ln in enumerate([3, 17, 30, 9]):
+        b.add(Request(uid=i, tokens=list(range(2, 2 + ln))))
+    batch = b.next_batch()
+    toks, lens = pad_batch(batch)
+    assert toks.shape == (batch.size, batch.padded_len)
+    for i, r in enumerate(batch.requests):
+        assert lens[i] == r.prompt_len
+        assert (toks[i, lens[i]:] == PAD).all()
