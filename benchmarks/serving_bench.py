@@ -1,0 +1,194 @@
+"""Serving benchmark: bucket (drain-the-batch) vs continuous batching.
+
+Drives one mixed-length request trace through both request-level paths of
+the engine and reports tokens/s, per-request completion latency (p50/p99),
+and padding/idle waste:
+
+  * bucket:      DynamicBatcher -> generate_batch per bucket, every request
+                 in a batch decodes until the batch's longest one finishes
+  * continuous:  persistent decode slots + paged KV pool; admit on free
+                 slot, retire at EOS (engine.serve_continuous)
+
+Usage:
+    PYTHONPATH=src python benchmarks/serving_bench.py \
+        --arch unimo-text --requests 24 --max-batch 4 [--poisson 20]
+
+CPU-friendly by default (reduced config, small trace); the same trace
+shapes run unchanged on TPU.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.registry import get_reduced, list_archs
+from repro.core.engine import InferenceEngine
+from repro.core.precision import get_policy
+from repro.core.sampling import SamplingParams
+from repro.core.scheduler import DynamicBatcher, Request, pad_batch
+
+
+def build_trace(n: int, seed: int, vocab: int, max_prompt: int,
+                max_new: int):
+    """Mixed-length trace: short-head/long-tail prompt lengths (the
+    paper's Fig.-3 observation) and per-request generation budgets."""
+    rng = np.random.default_rng(seed)
+    lens = np.clip(rng.lognormal(mean=2.5, sigma=0.8, size=n).astype(int) + 2,
+                   3, max_prompt)
+    news = rng.integers(max(2, max_new // 4), max_new + 1, size=n)
+    reqs = [Request(uid=i,
+                    tokens=[2] + list(map(int, rng.integers(
+                        4, vocab, size=int(lens[i]) - 1))),
+                    max_new_tokens=int(news[i]))
+            for i in range(n)]
+    return reqs
+
+
+def run_bucket(engine: InferenceEngine, reqs, sp, arrivals=None) -> dict:
+    """engine.serve semantics, instrumented per batch for latencies and
+    padding accounting.  With ``arrivals``, requests join the batcher
+    open-loop as they arrive (same workload the continuous path sees)."""
+    batcher = DynamicBatcher(max_batch=engine.max_batch)
+    incoming = sorted(zip(arrivals, reqs),
+                      key=lambda p: p[0]) if arrivals else None
+    if incoming is None:
+        for r in reqs:
+            batcher.add(r)
+    arrival_of = dict(zip((r.uid for r in reqs), arrivals)) \
+        if arrivals else {}
+    t0 = time.perf_counter()
+    lat, gen_tokens = {}, 0
+    prompt_real = prompt_padded = 0
+    decode_slot_steps = decode_live_steps = 0
+    while True:
+        if incoming:
+            now = time.perf_counter() - t0
+            while incoming and incoming[0][0] <= now:
+                batcher.add(incoming.pop(0)[1])
+        batch = batcher.next_batch()
+        if batch is None:
+            if not incoming:
+                break
+            time.sleep(min(0.01, max(0.0, incoming[0][0]
+                                     - (time.perf_counter() - t0))))
+            continue
+        toks, lens = pad_batch(batch)
+        max_new = max(r.max_new_tokens for r in batch.requests)
+        gen = engine.generate_batch(toks, lens, max_new, sp)
+        done_t = time.perf_counter() - t0
+        prompt_real += int(lens.sum())
+        prompt_padded += toks.size
+        for i, r in enumerate(batch.requests):
+            row = gen[i]
+            r.result = [int(t) for t in row[row >= 0]][:r.max_new_tokens]
+            # whole batch completes together; latency is arrival->done
+            lat[r.uid] = done_t - arrival_of.get(r.uid, 0.0)
+            gen_tokens += len(r.result)
+            decode_live_steps += len(r.result)
+        # every slot runs as many steps as the batch's longest request
+        steps = int((gen >= 0).sum(axis=1).max(initial=0))
+        decode_slot_steps += steps * batch.size
+    wall = time.perf_counter() - t0
+    lats = np.asarray([lat[r.uid] for r in reqs])
+    return {
+        "wall_s": round(wall, 3),
+        "generated_tokens": gen_tokens,
+        "tokens_per_s": round(gen_tokens / wall, 2),
+        "p50_latency_s": round(float(np.percentile(lats, 50)), 3),
+        "p99_latency_s": round(float(np.percentile(lats, 99)), 3),
+        "prefill_pad_frac": round(1 - prompt_real / prompt_padded, 3)
+        if prompt_padded else 0.0,
+        "decode_idle_frac": round(
+            1 - decode_live_steps / decode_slot_steps, 3)
+        if decode_slot_steps else 0.0,
+    }
+
+
+def run_continuous(engine: InferenceEngine, reqs, sp, *, page_size,
+                   steps_per_sync, arrivals=None) -> dict:
+    t0 = time.perf_counter()
+    _, m = engine.serve_continuous(reqs, sp, page_size=page_size,
+                                   steps_per_sync=steps_per_sync,
+                                   arrivals=arrivals)
+    wall = time.perf_counter() - t0
+    return {
+        "wall_s": round(wall, 3),
+        "generated_tokens": m.generated_tokens,
+        "tokens_per_s": round(m.generated_tokens / wall, 2),
+        "p50_latency_s": round(m.percentile_latency(50), 3),
+        "p99_latency_s": round(m.percentile_latency(99), 3),
+        "prefill_pad_frac": round(m.prefill_pad_frac, 3),
+        "decode_idle_frac": round(m.decode_idle_frac, 3),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="unimo-text", choices=list_archs())
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="bucket batch size == continuous decode slots")
+    ap.add_argument("--max-new-tokens", type=int, default=48)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--steps-per-sync", type=int, default=8)
+    ap.add_argument("--policy", default="fp32",
+                    choices=["fp32", "bf16", "fp16"])
+    ap.add_argument("--poisson", type=float, default=None,
+                    help="arrival rate (req/s) for an open-loop trace; "
+                         "default: all requests arrive at t=0")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch)
+    policy = get_policy(args.policy)
+    from repro.models import transformer as T
+    params = T.init_params(jax.random.PRNGKey(0), cfg, policy)
+    sp = SamplingParams()                                 # greedy
+
+    def fresh_engine():
+        return InferenceEngine(cfg, params, policy=policy,
+                               max_batch=args.max_batch,
+                               max_len=args.max_len)
+
+    max_prompt = args.max_len - args.max_new_tokens
+    trace = build_trace(args.requests, args.seed, min(cfg.vocab_size, 800),
+                        max_prompt, args.max_new_tokens)
+    arrivals = None
+    if args.poisson:
+        rng = np.random.default_rng(args.seed + 1)
+        arrivals = list(np.cumsum(
+            rng.exponential(1.0 / args.poisson, size=len(trace))))
+
+    import copy
+    # warm up compilation on both paths with the full trace shape set so
+    # the numbers compare steady-state serving, not tracing time
+    eng = fresh_engine()
+    run_bucket(eng, copy.deepcopy(trace), sp)
+    bucket = run_bucket(eng, copy.deepcopy(trace), sp, arrivals=arrivals)
+
+    eng = fresh_engine()
+    run_continuous(eng, copy.deepcopy(trace), sp, page_size=args.page_size,
+                   steps_per_sync=args.steps_per_sync)
+    cont = run_continuous(eng, copy.deepcopy(trace), sp,
+                          page_size=args.page_size,
+                          steps_per_sync=args.steps_per_sync,
+                          arrivals=arrivals)
+
+    speedup = (cont["tokens_per_s"] / bucket["tokens_per_s"]
+               if bucket["tokens_per_s"] else float("nan"))
+    print(json.dumps({
+        "arch": args.arch, "requests": args.requests,
+        "slots": args.max_batch, "max_new": args.max_new_tokens,
+        "poisson_rate": args.poisson,
+        "bucket": bucket, "continuous": cont,
+        "continuous_speedup_tokens_per_s": round(speedup, 3),
+    }, indent=2))
+
+
+if __name__ == "__main__":
+    main()

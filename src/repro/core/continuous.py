@@ -1,0 +1,166 @@
+"""Continuous (in-flight) batching — the serving-side successor of the
+paper's §2.3 dynamic batching.
+
+The bucket batcher (`DynamicBatcher`) drains whole batches: every request
+decodes until the *longest* one finishes, and each batch allocates a fresh
+dense cache.  Here, a fixed set of decode *slots* runs forever; requests
+are admitted into free slots mid-flight and retired at EOS, so the decode
+step is always as full as the traffic allows.  KV memory is a shared pool
+of fixed-size pages (see ``kv_cache.PAGED_KEYS``): pages are allocated on
+admit and freed on retire, so memory tracks the *actual* context lengths
+instead of slots * max_len.
+
+This module is host-side bookkeeping only (allocator, slot states, trace
+metrics); the device side lives in ``engine.serve_continuous`` (jitted
+admit + fused multi-token decode step) and ``kernels/decode_attention``
+(paged kernel).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.scheduler import Request
+
+
+class PageAllocator:
+    """Free-list allocator over ``num_pages`` physical pages.
+
+    Page ids are 0..num_pages-1; the engine reserves one extra pool page
+    (id num_pages) as the dump page, which is never handed out.
+    """
+
+    def __init__(self, num_pages: int):
+        self.num_pages = num_pages
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """n pages, or None (and no change) if the pool can't cover it."""
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        return pages
+
+    def free(self, pages: List[int]) -> None:
+        for p in pages:
+            if not (0 <= p < self.num_pages):
+                raise ValueError(f"bad page id {p}")
+        if len(set(pages)) != len(pages) or set(pages) & set(self._free):
+            raise ValueError("double free")
+        self._free.extend(pages)
+
+
+@dataclass
+class SlotState:
+    request: Request
+    pages: List[int]
+    emitted: List[int] = field(default_factory=list)
+    submitted_at: float = 0.0          # queued (arrival) time
+    admitted_at: float = 0.0
+    finished_at: Optional[float] = None
+
+
+@dataclass
+class ServeMetrics:
+    """Per-run counters for the continuous path (the bench compares these
+    against the bucket batcher's padding behaviour)."""
+    steps: int = 0                   # fused decode micro-steps executed
+    slot_steps_active: int = 0       # slot-steps that carried a live request
+    slot_steps_total: int = 0
+    prefill_tokens: int = 0          # real prompt tokens prefetched
+    prefill_padded: int = 0          # bucket-padded prompt tokens
+    generated_tokens: int = 0
+    admitted: int = 0
+    retired: int = 0
+    rejected: int = 0                # could never fit the page pool
+    latency_s: List[float] = field(default_factory=list)
+
+    @property
+    def decode_idle_frac(self) -> float:
+        if not self.slot_steps_total:
+            return 0.0
+        return 1.0 - self.slot_steps_active / self.slot_steps_total
+
+    @property
+    def prefill_pad_frac(self) -> float:
+        if not self.prefill_padded:
+            return 0.0
+        return 1.0 - self.prefill_tokens / self.prefill_padded
+
+    def percentile_latency(self, q: float) -> float:
+        return float(np.percentile(self.latency_s, q)) if self.latency_s \
+            else 0.0
+
+
+class ContinuousScheduler:
+    """FCFS admission control over decode slots + the page pool.
+
+    The engine drives it:  ``waiting`` holds not-yet-admitted requests
+    (arrival-gated when a trace supplies arrival offsets); ``admit``
+    claims a slot + pages, ``retire`` releases them.
+    """
+
+    def __init__(self, max_slots: int, allocator: PageAllocator,
+                 page_size: int, max_pages_per_slot: Optional[int] = None):
+        self.max_slots = max_slots
+        self.allocator = allocator
+        self.page_size = page_size
+        self.max_pages_per_slot = max_pages_per_slot
+        self.waiting: List[Request] = []
+        self.slots: Dict[int, SlotState] = {}      # slot idx -> state
+        self._submit_t: Dict[int, float] = {}      # uid -> queued time
+
+    # -- queue --------------------------------------------------------------
+    def submit(self, req: Request, now: float = 0.0) -> None:
+        self.waiting.append(req)
+        self._submit_t[req.uid] = now
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.slots)
+
+    def free_slots(self) -> List[int]:
+        return [s for s in range(self.max_slots) if s not in self.slots]
+
+    def pages_needed(self, req: Request) -> int:
+        total = req.prompt_len + req.max_new_tokens
+        n = -(-total // self.page_size)
+        if self.max_pages_per_slot is not None:
+            # generation budget is clamped to the slot's max context at
+            # admission, so never claim more than one slot can address
+            n = min(n, self.max_pages_per_slot)
+        return n
+
+    # -- admit / retire -----------------------------------------------------
+    def try_admit(self, now: float = 0.0) -> Optional[tuple]:
+        """Pop the head-of-line request into a free slot if the pool can
+        hold it.  Returns (slot_idx, SlotState) or None.  FCFS: a stuck
+        head (pool too full) blocks admission — freeing happens via
+        retire, so this can't deadlock while any slot is live."""
+        if not self.waiting:
+            return None
+        free = self.free_slots()
+        if not free:
+            return None
+        req = self.waiting[0]
+        pages = self.allocator.alloc(self.pages_needed(req))
+        if pages is None:
+            return None
+        self.waiting.pop(0)
+        slot = free[0]
+        st = SlotState(request=req, pages=pages, admitted_at=now,
+                       submitted_at=self._submit_t.get(req.uid, 0.0))
+        self.slots[slot] = st
+        return slot, st
+
+    def retire(self, slot: int, now: float = 0.0) -> SlotState:
+        st = self.slots.pop(slot)
+        st.finished_at = now
+        st.request.result = st.emitted[:st.request.max_new_tokens]
+        self.allocator.free(st.pages)
+        return st

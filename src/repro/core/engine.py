@@ -12,6 +12,7 @@ speedup of the optimized stack is measurable against it.
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import List, Optional
 
@@ -19,11 +20,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import (HYBRID, MLSTM, MOE_FFN, SLSTM, ModelConfig)
+from repro.core import kv_cache as KV
 from repro.core import pruning as PR
+from repro.core.continuous import (ContinuousScheduler, PageAllocator,
+                                   ServeMetrics)
 from repro.core.precision import BF16, Policy
 from repro.core.sampling import SamplingParams, sample
-from repro.core.scheduler import Batch, DynamicBatcher, Request, pad_batch
+from repro.core.scheduler import (DEFAULT_BUCKETS, Batch, DynamicBatcher,
+                                  Request, pad_batch, pick_bucket,
+                                  truncate_prompt)
 from repro.core.tokenizer import EOS
 from repro.models import transformer as T
 
@@ -62,6 +68,8 @@ class InferenceEngine:
         self.prune_maps = prune_maps
         self.rng = jax.random.PRNGKey(seed)
         self.stats = EngineStats()
+        self._donate = donate
+        self._cont_cache = {}          # (sp, steps) -> jitted (admit, step)
 
         def prefill_fn(params, tokens, lengths, cache, start=0):
             return T.forward_prefill(params, cfg, tokens, lengths, cache,
@@ -108,6 +116,14 @@ class InferenceEngine:
         self._decode_n = jax.jit(decode_n_fn, static_argnums=(4,),
                                  donate_argnums=(2,) if donate else ())
         self._full = jax.jit(full_fn)
+
+    # ------------------------------------------------------------------
+    def prompt_buckets(self):
+        """Prompt length buckets bounded by the engine context: max_len is
+        always the final bucket, so prompts that fit are never truncated
+        below it and prompts beyond it can't silently overflow the cache."""
+        return tuple(b for b in DEFAULT_BUCKETS if b < self.max_len) \
+            + (self.max_len,)
 
     # ------------------------------------------------------------------
     def generate_batch(self, tokens: np.ndarray, lengths: np.ndarray,
@@ -232,10 +248,298 @@ class InferenceEngine:
             generated_tokens=int((out >= 0).sum()), batches=1))
         return out
 
+    # -- continuous batching (paged KV, in-flight admission) --------------
+    def _continuous_fns(self, sp: SamplingParams, steps_per_sync: int):
+        """Build (once per (sp, steps) combo) the two jitted entry points
+        of the continuous path:
+
+        * admit: bucket-padded prefill of a batch of same-bucket requests
+          that scatters K/V straight into their freshly allocated pool
+          pages (and resets those pages' stale positions), merges dense
+          per-slot state into the slot rows, and samples each first
+          token — one dispatch per admission group.
+        * step: a lax.scan fusing ``steps_per_sync`` iterations of
+          [decode all slots -> sample on device -> scatter KV into pages],
+          so the sampled path costs one host round-trip per *sync*, not
+          per token.
+        """
+        key = (sp, steps_per_sync)
+        cached = self._cont_cache.get(key)
+        if cached is not None:
+            return cached
+        cfg, policy, max_len = self.cfg, self.policy, self.max_len
+
+        def admit_fn(params, tokens, length, slot, block_row, pages, cache,
+                     rng):
+            cache = KV.reset_pages_all(cache, pages)
+            view = KV.slot_view(cache, tokens.shape[0])
+            paged = {"block_tables": block_row,
+                     "active": jnp.ones((tokens.shape[0],), bool)}
+            logits, view = T.forward_prefill(params, cfg, tokens, length,
+                                             view, policy=policy,
+                                             max_len=max_len, last_only=True,
+                                             paged=paged)
+            cache = KV.slot_merge(cache, view, slot)
+            rng, sub = jax.random.split(rng)
+            first = sample(logits[:, 0], sub, sp)
+            return first, cache, rng
+
+        def step_fn(params, tok, lens, rem, act, block_tables, cache, rng):
+            paged = {"block_tables": block_tables}
+
+            def body(carry, _):
+                tok, lens, rem, act, cache, rng = carry
+                logits, cache = T.forward_decode(
+                    params, cfg, tok[:, None], cache, lens, policy=policy,
+                    max_len=max_len, paged={**paged, "active": act})
+                rng, sub = jax.random.split(rng)
+                nxt = sample(logits[:, 0], sub, sp)
+                is_eos = nxt == EOS                  # EOS is not emitted
+                emit = jnp.where(act & ~is_eos, nxt, -1)
+                still = act & ~is_eos & (rem > 1)
+                lens = lens + act.astype(lens.dtype)
+                rem = rem - act.astype(rem.dtype)
+                tok = jnp.where(still, nxt, tok)
+                return (tok, lens, rem, still, cache, rng), (emit, act)
+
+            carry, (emits, acts) = jax.lax.scan(
+                body, (tok, lens, rem, act, cache, rng), None,
+                length=steps_per_sync)
+            tok, lens, rem, act, cache, rng = carry
+            return tok, lens, rem, act, cache, rng, emits.T, acts.T
+
+        dn6 = (6,) if self._donate else ()
+        fns = (jax.jit(admit_fn, donate_argnums=dn6),
+               jax.jit(step_fn, donate_argnums=dn6))
+        self._cont_cache[key] = fns
+        return fns
+
+    def serve_continuous(self, requests: List[Request],
+                         sp: SamplingParams = SamplingParams(), *,
+                         page_size: int = 16,
+                         num_pages: Optional[int] = None,
+                         slots: Optional[int] = None,
+                         steps_per_sync: int = 4,
+                         arrivals: Optional[List[float]] = None):
+        """Serve requests with continuous batching over a paged KV cache.
+
+        Unlike :meth:`serve` (sort -> bucket -> drain), decode slots are
+        persistent: a request is admitted into a free slot the moment one
+        exists (and the page pool can hold its worst-case context), and
+        is retired at EOS — other slots never wait for it.  KV lives in
+        ``num_pages`` shared pages; per-request pages are allocated at
+        admission and freed at retirement.
+
+        arrivals: optional per-request arrival offsets in seconds (same
+        order as ``requests``) for open-loop traces; requests only become
+        admissible once their arrival time has passed.
+
+        Returns (requests, ServeMetrics); ``r.result`` is filled like
+        :meth:`serve`.
+        """
+        if arrivals is not None and len(arrivals) != len(requests):
+            raise ValueError("arrivals must match requests 1:1")
+        slots = slots or self.max_batch
+        pages_per_slot = -(-self.max_len // page_size)
+        if num_pages is None:
+            num_pages = slots * pages_per_slot
+        admit_fn, step_fn = self._continuous_fns(sp, steps_per_sync)
+        buckets = self.prompt_buckets()
+        # Two layer families are sensitive to prompt padding (the dense
+        # bucket path shares both limitations for ragged batches):
+        # recurrent mixers fold PAD steps into their state, and
+        # capacity-based MoE lets PAD tokens compete for expert slots.
+        # Admit those architectures at exact prompt length instead — one
+        # retrace per distinct length, but exact results.
+        pad_sensitive = any(
+            spec.mixer in (MLSTM, SLSTM, HYBRID) or spec.ffn == MOE_FFN
+            for stack in self.cfg.stacks for spec in stack.pattern)
+
+        cache = T.init_paged_cache(
+            self.cfg, num_pages=num_pages, page_size=page_size,
+            max_slots=slots, max_len=self.max_len,
+            dtype=self.policy.compute_dtype)
+        dump = num_pages                                  # pool page P-1
+        sched = ContinuousScheduler(slots, PageAllocator(num_pages),
+                                    page_size,
+                                    max_pages_per_slot=pages_per_slot)
+        metrics = ServeMetrics()
+        stats = EngineStats(batches=1)
+
+        block_tables = np.full((slots, pages_per_slot), -1, np.int32)
+        tok = np.zeros((slots,), np.int32)
+        lens = np.zeros((slots,), np.int32)
+        rem = np.zeros((slots,), np.int32)
+        act = np.zeros((slots,), bool)
+        rng = self.rng
+
+        order = sorted(range(len(requests)),
+                       key=lambda i: arrivals[i]) if arrivals else \
+            list(range(len(requests)))
+        incoming = [(arrivals[i] if arrivals else 0.0, requests[i])
+                    for i in order]
+        t0 = time.perf_counter()
+
+        def now():
+            return time.perf_counter() - t0
+
+        def retire(slot):
+            st = sched.retire(slot, now())
+            block_tables[slot, :] = -1
+            act[slot] = False
+            metrics.retired += 1
+            metrics.generated_tokens += len(st.request.result)
+            # queue wait counts: latency is submission -> completion
+            metrics.latency_s.append(st.finished_at - st.submitted_at)
+
+        while incoming or sched.has_work():
+            # -- release arrived requests into the FCFS queue -------------
+            while incoming and incoming[0][0] <= now():
+                _, req = incoming.pop(0)
+                if self.prune_maps is not None:
+                    req.tokens = [int(t) for t in PR.remap_tokens(
+                        np.asarray([req.tokens], np.int32),
+                        self.prune_maps)[0]]
+                if req.prompt_len > self.max_len:
+                    # must cut: leave the truncated prompt room to
+                    # actually generate (reserve its token budget, but
+                    # keep at least half the context for the prompt)
+                    limit = max(self.max_len - req.max_new_tokens,
+                                self.max_len // 2)
+                    req.tokens = truncate_prompt(req.tokens, limit,
+                                                 uid=req.uid)
+                sched.submit(req, now())
+
+            # -- admit into free slots ------------------------------------
+            # consecutive FCFS admissions sharing a prompt bucket run as
+            # ONE batched prefill dispatch (per-request prefills would
+            # serialize 1-row model calls against the decode loop)
+            pending_adm: List[tuple] = []      # [(slot, SlotState, bucket)]
+
+            def flush_admissions():
+                # power-of-two admission chunks: group size would otherwise
+                # depend on scheduling timing, making the set of traced
+                # (B, bucket) prefill shapes unbounded/nondeterministic
+                while pending_adm:
+                    B = 1 << (len(pending_adm).bit_length() - 1)
+                    _flush_chunk([pending_adm.pop(0) for _ in range(B)])
+
+            def _flush_chunk(chunk):
+                nonlocal cache, rng
+                bucket = chunk[0][2]
+                B = len(chunk)
+                toks = np.zeros((B, bucket), np.int32)
+                plens = np.zeros((B,), np.int32)
+                slots_arr = np.zeros((B,), np.int32)
+                rows = np.zeros((B, pages_per_slot), np.int32)
+                pages_arr = np.full((B, pages_per_slot), dump, np.int32)
+                for i, (slot, st, _) in enumerate(chunk):
+                    req = st.request
+                    plens[i] = req.prompt_len
+                    toks[i, :req.prompt_len] = req.tokens
+                    slots_arr[i] = slot
+                    block_tables[slot, :] = -1
+                    block_tables[slot, :len(st.pages)] = st.pages
+                    rows[i] = block_tables[slot]
+                    pages_arr[i, :len(st.pages)] = st.pages
+                tp0 = time.perf_counter()
+                first, cache, rng = admit_fn(
+                    self.params, jnp.asarray(toks), jnp.asarray(plens),
+                    jnp.asarray(slots_arr), jnp.asarray(rows),
+                    jnp.asarray(pages_arr), cache, rng)
+                first = np.asarray(jax.block_until_ready(first))
+                stats.prefill_s += time.perf_counter() - tp0
+                for i, (slot, st, _) in enumerate(chunk):
+                    req = st.request
+                    plen = req.prompt_len
+                    stats.prompt_tokens += plen
+                    metrics.admitted += 1
+                    metrics.prefill_tokens += plen
+                    metrics.prefill_padded += bucket
+                    budget = min(req.max_new_tokens, self.max_len - plen)
+                    if first[i] != EOS and budget > 0:
+                        st.emitted.append(int(first[i]))
+                    if first[i] == EOS or budget <= 1:
+                        retire(slot)
+                    else:
+                        tok[slot] = first[i]
+                        lens[slot] = plen
+                        rem[slot] = budget - 1
+                        act[slot] = True
+
+            while True:                # flush may retire (budget 0/1, EOS
+                progress = False       # at admit) and free slots: retry
+                while True:
+                    adm = sched.try_admit(now())
+                    if adm is None:
+                        break
+                    progress = True
+                    slot, st = adm
+                    plen = st.request.prompt_len
+                    bucket = plen if pad_sensitive \
+                        else pick_bucket(plen, buckets)
+                    if pending_adm and pending_adm[0][2] != bucket:
+                        flush_admissions()
+                    pending_adm.append((slot, st, bucket))
+                flush_admissions()
+                if not progress or not sched.waiting:
+                    break
+
+            if not sched.slots:
+                if sched.waiting:
+                    # head request can never fit (pool fully free, still
+                    # too small): fail it loudly rather than spin forever
+                    req = sched.waiting.pop(0)
+                    warnings.warn(
+                        f"request {req.uid}: needs "
+                        f"{sched.pages_needed(req)} pages but the pool "
+                        f"holds {sched.allocator.num_pages}; rejecting")
+                    req.result = []
+                    metrics.rejected += 1
+                    continue
+                if incoming:        # idle until the next arrival
+                    time.sleep(max(0.0, min(incoming[0][0] - now(), 0.01)))
+                continue
+
+            # -- fused decode steps ---------------------------------------
+            td0 = time.perf_counter()
+            (tok_d, lens_d, rem_d, act_d, cache, rng, emits,
+             acts) = step_fn(self.params, jnp.asarray(tok),
+                             jnp.asarray(lens), jnp.asarray(rem),
+                             jnp.asarray(act),
+                             jnp.asarray(block_tables), cache, rng)
+            emits = np.asarray(jax.block_until_ready(emits))
+            stats.decode_s += time.perf_counter() - td0
+            tok, lens, rem = (np.array(tok_d), np.array(lens_d),
+                              np.array(rem_d))
+            act_new = np.array(act_d)
+            acts = np.asarray(acts)
+            metrics.steps += steps_per_sync
+            metrics.slot_steps_total += slots * steps_per_sync
+            metrics.slot_steps_active += int(acts.sum())
+            for slot in list(sched.slots):
+                for t in emits[slot]:
+                    if t >= 0:
+                        sched.slots[slot].emitted.append(int(t))
+                if not act_new[slot]:
+                    retire(slot)
+            act = act_new
+
+        self.rng = rng
+        if self.prune_maps is not None:
+            for r in requests:
+                if r.result:
+                    r.result = [int(t) for t in PR.unmap_tokens(
+                        np.asarray([r.result]), self.prune_maps)[0]]
+        stats.generated_tokens = metrics.generated_tokens
+        self.stats.merge(stats)
+        return requests, metrics
+
     # -- request-level API (P4 dynamic batching) -------------------------
     def serve(self, requests: List[Request],
               sp: SamplingParams = SamplingParams()) -> List[Request]:
-        batcher = DynamicBatcher(max_batch=self.max_batch)
+        batcher = DynamicBatcher(max_batch=self.max_batch,
+                                 buckets=self.prompt_buckets())
         for r in requests:
             batcher.add(r)
         while True:

@@ -148,3 +148,192 @@ def cache_mask(cache_pos, q_pos, window: Optional[int]):
     if window is not None:
         m &= cache_pos[:, None, :] > (q_pos[:, :, None] - window)
     return m
+
+
+# ---------------------------------------------------------------------------
+# Paged (block-table) KV layout — continuous-batching serving path
+# ---------------------------------------------------------------------------
+#
+# Instead of a dense (B, S_max, H, D) cache per slot, K/V live in a shared
+# pool of fixed-size pages:
+#
+#   pk / pv : (P, page, H_kv, D)   physical page pool (per layer)
+#   ppos    : (P, page)            absolute position per entry, -1 = empty
+#
+# plus one *global* block table (B_slots, pages_per_slot) of physical page
+# ids shared by every attention layer (page id p belongs to the same request
+# in all layers' pools).  Page P-1 is the reserved "dump" page: writes from
+# inactive slots and prompt padding land there with pos = -1, so masking
+# stays exact without branching.  A sliding-window layer maps positions into
+# a logical ring of ceil((window+1)/page) pages — the same physical pages
+# are cyclically overwritten, and the stored absolute positions keep the
+# attention mask exact (same trick as the dense ring cache above).
+
+PAGED_KEYS = ("pk", "pv", "ppos")
+
+
+def paged_layer_cache_shape(cfg: ModelConfig, spec: LayerSpec,
+                            num_pages: int, page_size: int, max_slots: int,
+                            max_len: int, dtype) -> dict:
+    """Paged cache for one layer.  ATTN / HYBRID attention K/V become page
+    pools; MLA and recurrent families keep their dense per-slot state (the
+    slot API — admit/retire — is identical for them)."""
+    hd = cfg.resolved_head_dim
+
+    def pool():
+        P = num_pages + 1                               # +1 dump page
+        return {"pk": jnp.zeros((P, page_size, cfg.num_kv_heads, hd), dtype),
+                "pv": jnp.zeros((P, page_size, cfg.num_kv_heads, hd), dtype),
+                "ppos": jnp.full((P, page_size), -1, jnp.int32)}
+
+    if spec.mixer == ATTN:
+        return pool()
+    if spec.mixer == HYBRID:
+        out = pool()
+        dense = layer_cache_shape(cfg, spec, max_slots, max_len, dtype)
+        out["ssm"] = dense["ssm"]
+        out["conv"] = dense["conv"]
+        return out
+    # MLA / mLSTM / sLSTM: dense per-slot state behind the same slot API
+    return layer_cache_shape(cfg, spec, max_slots, max_len, dtype)
+
+
+def paged_ring_len(window: Optional[int], page_size: int,
+                   pages_per_slot: int) -> int:
+    """Logical ring length (multiple of page_size) a layer writes into.
+    Full attention uses the whole per-slot page range; windowed layers
+    cycle through ceil((window+1)/page) logical pages."""
+    if window is None:
+        return pages_per_slot * page_size
+    pages_w = -(-(window + 1) // page_size)
+    return min(pages_w, pages_per_slot) * page_size
+
+
+def paged_write_prefill(cache: dict, new: dict, cache_pos, block_tables, *,
+                        ring_len: int) -> dict:
+    """Scatter a prompt's K/V into pool pages via the slot block tables.
+
+    cache_pos: (B, S) absolute positions (-1 = padding); block_tables:
+    (B, pages_per_slot) physical page ids (-1 = unallocated).  Only the
+    last min(S, ring_len) valid tokens per row are written (ring layers
+    would otherwise scatter twice into one entry, which is unordered).
+    """
+    out = dict(cache)
+    page = cache["ppos"].shape[1]
+    dump = cache["ppos"].shape[0] - 1
+    B, S = cache_pos.shape
+    take = min(S, ring_len)
+    valid = jnp.maximum(cache_pos.max(axis=1) + 1, 0)          # (B,)
+    start = jnp.clip(valid - take, 0, S - take)
+    idx = start[:, None] + jnp.arange(take)[None, :]           # (B, take)
+    b_idx = jnp.arange(B)[:, None]
+    pos_w = cache_pos[b_idx, idx]                              # (B, take)
+    rp = jnp.where(pos_w >= 0, pos_w % ring_len, 0)
+    lp, off = rp // page, rp % page
+    phys = jnp.take_along_axis(block_tables, lp, axis=1)       # (B, take)
+    ok = (pos_w >= 0) & (phys >= 0)
+    phys = jnp.where(ok, phys, dump)
+    for key, pool_key in (("k", "pk"), ("v", "pv")):
+        out[pool_key] = cache[pool_key].at[phys, off].set(
+            new[key][b_idx, idx].astype(cache[pool_key].dtype))
+    out["ppos"] = cache["ppos"].at[phys, off].set(
+        jnp.where(ok, pos_w, -1))
+    return out
+
+
+def paged_write_decode(cache: dict, new: dict, lengths, block_tables,
+                       active=None, *, ring_len: int) -> dict:
+    """Write one token per slot at absolute position ``lengths`` (B,).
+    Inactive slots (active == False) are routed to the dump page."""
+    out = dict(cache)
+    page = cache["ppos"].shape[1]
+    dump = cache["ppos"].shape[0] - 1
+    B = lengths.shape[0]
+    rp = lengths % ring_len
+    lp, off = rp // page, rp % page
+    phys = block_tables[jnp.arange(B), lp]
+    ok = phys >= 0
+    if active is not None:
+        ok &= active
+    phys = jnp.where(ok, phys, dump)
+    for key, pool_key in (("k", "pk"), ("v", "pv")):
+        out[pool_key] = cache[pool_key].at[phys, off].set(
+            new[key][:, 0].astype(cache[pool_key].dtype))
+    out["ppos"] = cache["ppos"].at[phys, off].set(
+        jnp.where(ok, lengths, -1))
+    return out
+
+
+def paged_gather(cache: dict, block_tables):
+    """Dense per-slot view of the pool: (B, pages*page, H, D) k/v plus
+    (B, pages*page) positions.  Unallocated table entries read the dump
+    page and are masked to pos = -1."""
+    dump = cache["ppos"].shape[0] - 1
+    safe = jnp.where(block_tables >= 0, block_tables, dump)
+    k = cache["pk"][safe]                      # (B, pages, page, H, D)
+    v = cache["pv"][safe]
+    kp = jnp.where((block_tables >= 0)[..., None],
+                   cache["ppos"][safe], -1)    # (B, pages, page)
+    B, npg, page = kp.shape
+    return (k.reshape(B, npg * page, *k.shape[3:]),
+            v.reshape(B, npg * page, *v.shape[3:]),
+            kp.reshape(B, npg * page))
+
+
+def reset_pages_all(cache: dict, pages) -> dict:
+    """:func:`reset_pages` over every layer of a full model cache."""
+    return {"layers": tuple(tuple(reset_pages(c, pages) for c in stack_c)
+                            for stack_c in cache["layers"])}
+
+
+def reset_pages(cache, pages) -> dict:
+    """Mark freshly (re)allocated physical pages empty (``pages`` may be
+    padded with the dump page id, whose pos is always -1 anyway).  Only
+    ``ppos`` needs clearing: stale K/V from a page's previous owner is
+    unreachable once its positions are -1."""
+    if "ppos" not in cache:
+        return cache
+    out = dict(cache)
+    # pool leaves may carry a leading scan-repeats dim
+    if cache["ppos"].ndim == 3:
+        out["ppos"] = cache["ppos"].at[:, pages, :].set(-1)
+    else:
+        out["ppos"] = cache["ppos"].at[pages, :].set(-1)
+    return out
+
+
+# -- slot view / merge: admission prefill on a slot subset ------------------
+
+
+def slot_view(cache: dict, n_view: int) -> dict:
+    """A fresh ``n_view``-slot working view of a persistent multi-slot
+    cache: paged pool leaves pass through (they are shared, indexed via
+    block tables), per-slot leaves come back *empty* (zeros, pos = -1) —
+    an admitted request always starts from clean slot state."""
+
+    def fresh(key, a):
+        shape = (a.shape[0], n_view) + a.shape[2:]      # [repeats, slots,...]
+        if key == "pos":
+            return jnp.full(shape, -1, a.dtype)
+        return jnp.zeros(shape, a.dtype)
+
+    def layer(c):
+        return {k: (v if k in PAGED_KEYS else fresh(k, v))
+                for k, v in c.items()}
+
+    return {"layers": tuple(tuple(layer(c) for c in stack_c)
+                            for stack_c in cache["layers"])}
+
+
+def slot_merge(cache: dict, view: dict, slots) -> dict:
+    """Scatter a slot view produced by :func:`slot_view` (and updated by a
+    prefill) back into the persistent cache at ``slots`` (n_view,)."""
+
+    def layer(c, vv):
+        return {k: (vv[k] if k in PAGED_KEYS
+                    else c[k].at[:, slots].set(vv[k].astype(c[k].dtype)))
+                for k in c}
+
+    return {"layers": tuple(
+        tuple(layer(c, vv) for c, vv in zip(sc, sv))
+        for sc, sv in zip(cache["layers"], view["layers"]))}

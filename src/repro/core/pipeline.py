@@ -83,7 +83,8 @@ def run_pipelined(texts: Sequence[str], tokenizer: Optional[FastTokenizer],
                   sp: SamplingParams = SamplingParams(), max_batch: int = 8,
                   queue_depth: int = 4) -> List[PipelineResult]:
     """Paper Figure-4 topology: pre || infer || post as concurrent stages."""
-    batcher = DynamicBatcher(max_batch=max_batch)
+    batcher = DynamicBatcher(max_batch=max_batch,
+                             buckets=engine.prompt_buckets())
     q_pre = queue.Queue(maxsize=queue_depth)
     q_post = queue.Queue(maxsize=queue_depth)
     results: List[PipelineResult] = []
@@ -109,7 +110,8 @@ def run_sequential(texts: Sequence[str], tokenizer: Optional[FastTokenizer],
                    sp: SamplingParams = SamplingParams(),
                    max_batch: int = 8) -> List[PipelineResult]:
     """The paper's pre-optimization flow: strictly sequential stages."""
-    batcher = DynamicBatcher(max_batch=max_batch)
+    batcher = DynamicBatcher(max_batch=max_batch,
+                             buckets=engine.prompt_buckets())
     for uid, text in enumerate(texts):
         batcher.add(Request(uid=uid, tokens=tokenizer.encode(text),
                             max_new_tokens=max_new_tokens))

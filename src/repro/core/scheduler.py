@@ -10,12 +10,32 @@ set.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import List, Optional, Sequence
 
 import numpy as np
 
 DEFAULT_BUCKETS = (32, 64, 128, 256, 512, 1024, 2048, 4096)
+
+
+class PromptOverflowError(ValueError):
+    """Prompt longer than the largest bucket with overflow='reject'."""
+
+
+def truncate_prompt(tokens: List[int], limit: int, *,
+                    uid: Optional[int] = None) -> List[int]:
+    """Left-truncate an over-long prompt to its last ``limit`` tokens,
+    warning loudly — the *recent* context is what conditions generation.
+    (Replaces the old silent right-side clamp in ``pad_batch``.)"""
+    if len(tokens) <= limit:
+        return tokens
+    who = f"request {uid}" if uid is not None else "request"
+    warnings.warn(
+        f"{who}: prompt of {len(tokens)} tokens exceeds the maximum "
+        f"length {limit}; keeping the last {limit} tokens",
+        stacklevel=2)
+    return tokens[-limit:]
 
 
 @dataclass
@@ -52,9 +72,17 @@ class DynamicBatcher:
     max_batch: int = 8
     buckets: Sequence[int] = DEFAULT_BUCKETS
     sort_by_length: bool = True        # the paper's inference-order trick
+    overflow: str = "truncate"         # over-long prompts: truncate | reject
     _queue: List[Request] = field(default_factory=list)
 
     def add(self, req: Request) -> None:
+        limit = self.buckets[-1]
+        if req.prompt_len > limit:
+            if self.overflow == "reject":
+                raise PromptOverflowError(
+                    f"request {req.uid}: prompt of {req.prompt_len} tokens "
+                    f"exceeds the largest bucket ({limit})")
+            req.tokens = truncate_prompt(req.tokens, limit, uid=req.uid)
         self._queue.append(req)
 
     def pending(self) -> int:
@@ -86,7 +114,11 @@ def pad_batch(batch: Batch, pad_id: int = 0):
     toks = np.full((B, L), pad_id, np.int32)
     lens = np.zeros((B,), np.int32)
     for i, r in enumerate(batch.requests):
-        t = r.tokens[:L]
-        toks[i, :len(t)] = t
-        lens[i] = len(t)
+        if len(r.tokens) > L:
+            # DynamicBatcher.add truncates on entry; a longer prompt here
+            # means a hand-built Batch — fail loudly, never clip silently.
+            raise PromptOverflowError(
+                f"request {r.uid}: {len(r.tokens)} tokens > padded_len {L}")
+        toks[i, :len(r.tokens)] = r.tokens
+        lens[i] = len(r.tokens)
     return toks, lens

@@ -84,6 +84,125 @@ def _kernel(q_ref, k_ref, v_ref, kp_ref, qp_ref, o_ref,
         o_ref[0, 0] = out.astype(o_ref.dtype)
 
 
+def paged_shape_supported(q, kpool, block_tables) -> bool:
+    B, Sq, Hq, D = q.shape
+    page, Hkv = kpool.shape[1], kpool.shape[2]
+    return (Sq == 1 and Hq % Hkv == 0 and D % 8 == 0
+            and kpool.shape[3] % 8 == 0 and page % 8 == 0
+            and block_tables.shape[0] == B)
+
+
+def _paged_kernel(bt_ref, q_ref, k_ref, v_ref, kp_ref, qp_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, scale, attn_softcap, window,
+                  npages, g):
+    """Same online-softmax scheme as _kernel, but the grid walks the
+    slot's block table: page j streams physical page bt[b, j] from the
+    pool (the BlockSpec index_map does the indirection; bt itself arrives
+    via scalar prefetch).  Unallocated entries resolve to the dump page,
+    whose positions are always -1, so masking alone keeps them out."""
+    b, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                    # (Hq, D)
+    k = k_ref[0].astype(jnp.float32)                       # (page, Hkv, D)
+    v = v_ref[0].astype(jnp.float32)                       # (page, Hkv, Dv)
+    kp = kp_ref[0]                                         # (page,)
+    qp = qp_ref[0]                                         # (1,)
+    allocated = bt_ref[b, j] >= 0
+
+    Hq, D = q.shape
+    _, Hkv, _ = k.shape
+    qg = q.reshape(Hkv, g, D)
+    logits = jax.lax.dot_general(
+        qg, k, (((2,), (2,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32) * scale
+    if attn_softcap is not None:
+        logits = jnp.tanh(logits / attn_softcap) * attn_softcap
+    mask = (kp <= qp[0]) & (kp >= 0) & allocated
+    if window is not None:
+        mask &= kp > (qp[0] - window)
+    logits = jnp.where(mask[None, None, :], logits, -jnp.inf)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    p = jnp.exp(logits - m_safe[..., None])
+    p = jnp.where(mask[None, None, :], p, 0.0)
+
+    pv = jax.lax.dot_general(
+        p, v, (((2,), (0,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32)
+    acc_scr[...] = acc_scr[...] * alpha[..., None] + pv
+    l_scr[...] = l_scr[...] * alpha + p.sum(-1)
+    m_scr[...] = m_new
+
+    @pl.when(j == npages - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-37)[..., None]
+        out = (acc_scr[...] / denom).reshape(Hq, acc_scr.shape[-1])
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "scale",
+                                             "attn_softcap", "interpret"))
+def paged_decode_attention(q, kpool, vpool, ppos, block_tables, q_pos, *,
+                           window: Optional[int], scale: float,
+                           attn_softcap: Optional[float] = None,
+                           interpret: bool = False):
+    """Decode attention over a paged KV pool.
+
+    q: (B,1,Hq,D); kpool/vpool: (P,page,Hkv,D[v]); ppos: (P,page) absolute
+    positions (-1 empty); block_tables: (B,npages) physical page ids with
+    -1 = unallocated; q_pos: (B,1).  Page P-1 is the dump page.
+    """
+    B, _, Hq, D = q.shape
+    P, page, Hkv, Dv = vpool.shape
+    npages = block_tables.shape[1]
+    g = Hq // Hkv
+    dump = P - 1
+
+    def page_of(b, j, bt):
+        pid = bt[b, j]
+        return jnp.where(pid < 0, dump, pid)
+
+    kernel = functools.partial(_paged_kernel, scale=scale,
+                               attn_softcap=attn_softcap, window=window,
+                               npages=npages, g=g)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, npages),
+        in_specs=[
+            pl.BlockSpec((1, 1, Hq, D), lambda b, j, bt: (b, 0, 0, 0)),
+            pl.BlockSpec((1, page, Hkv, D),
+                         lambda b, j, bt: (page_of(b, j, bt), 0, 0, 0)),
+            pl.BlockSpec((1, page, Hkv, Dv),
+                         lambda b, j, bt: (page_of(b, j, bt), 0, 0, 0)),
+            pl.BlockSpec((1, page),
+                         lambda b, j, bt: (page_of(b, j, bt), 0)),
+            pl.BlockSpec((1, 1), lambda b, j, bt: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Hq, Dv), lambda b, j, bt: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Hkv, g), jnp.float32),
+            pltpu.VMEM((Hkv, g), jnp.float32),
+            pltpu.VMEM((Hkv, g, Dv), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, 1, Hq, Dv), q.dtype),
+        interpret=interpret,
+    )(block_tables, q, kpool, vpool, ppos, q_pos)
+    return out
+
+
 @functools.partial(jax.jit, static_argnames=("window", "scale",
                                              "attn_softcap", "block_k",
                                              "interpret"))

@@ -63,6 +63,19 @@ def maybe_decode_attention(q, k, v, k_pos, q_pos, *, window, scale,
                                interpret=(_MODE == "interpret"))
 
 
+def maybe_paged_decode_attention(q, kpool, vpool, ppos, block_tables, q_pos,
+                                 *, window, scale, attn_softcap=None):
+    if _MODE == "off":
+        return None
+    from repro.kernels import decode_attention as DA
+    if not DA.paged_shape_supported(q, kpool, block_tables):
+        return None
+    return DA.paged_decode_attention(q, kpool, vpool, ppos, block_tables,
+                                     q_pos, window=window, scale=scale,
+                                     attn_softcap=attn_softcap,
+                                     interpret=(_MODE == "interpret"))
+
+
 def maybe_rmsnorm(x, w):
     if _MODE == "off":
         return None

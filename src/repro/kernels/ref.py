@@ -42,6 +42,20 @@ def decode_attention_ref(q, k, v, k_pos, q_pos, *, window: Optional[int],
                                scale=scale, attn_softcap=attn_softcap)
 
 
+def paged_decode_attention_ref(q, kpool, vpool, ppos, block_tables, q_pos, *,
+                               window: Optional[int], scale: float,
+                               attn_softcap: Optional[float] = None):
+    """Dense-gather oracle for the paged decode kernel: resolve each slot's
+    block table into a contiguous (B, npages*page, ...) view (the same
+    ``kv_cache.paged_gather`` the production fallback uses), then run the
+    dense decode reference."""
+    from repro.core.kv_cache import paged_gather
+    k, v, kp = paged_gather({"pk": kpool, "pv": vpool, "ppos": ppos},
+                            block_tables)
+    return decode_attention_ref(q, k, v, kp, q_pos, window=window,
+                                scale=scale, attn_softcap=attn_softcap)
+
+
 def rmsnorm_ref(x, w, eps: float = 1e-6):
     dt = x.dtype
     xf = x.astype(jnp.float32)

@@ -36,6 +36,11 @@ def main():
     ap.add_argument("--no-kv-cache", action="store_true",
                     help="paper baseline mode")
     ap.add_argument("--no-pipeline", action="store_true")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching over a paged KV cache "
+                         "instead of bucket batches")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--steps-per-sync", type=int, default=4)
     ap.add_argument("--prune-coverage", type=float, default=None,
                     help="e.g. 0.999 -> prune vocab to that corpus coverage")
     ap.add_argument("--temperature", type=float, default=0.0)
@@ -66,6 +71,29 @@ def main():
                              prune_maps=maps)
     sp = SamplingParams(temperature=args.temperature,
                         top_k=40 if args.temperature > 0 else 0)
+
+    if args.continuous:
+        from repro.core.scheduler import Request
+        reqs = [Request(uid=i, tokens=tok.encode(t),
+                        max_new_tokens=args.max_new_tokens)
+                for i, t in enumerate(texts)]
+        t0 = time.time()
+        done, metrics = engine.serve_continuous(
+            reqs, sp, page_size=args.page_size,
+            steps_per_sync=args.steps_per_sync)
+        dt = time.time() - t0
+        for r in done[:3]:
+            print(f"[{r.uid}] {tok.decode(r.result or [])[:70]!r}")
+        print(json.dumps({
+            "requests": len(done), "wall_s": round(dt, 3),
+            "generated_tokens": metrics.generated_tokens,
+            "tokens_per_s": round(metrics.generated_tokens / dt, 1),
+            "p50_latency_s": round(metrics.percentile_latency(50), 3),
+            "p99_latency_s": round(metrics.percentile_latency(99), 3),
+            "decode_idle_frac": round(metrics.decode_idle_frac, 3),
+            "prefill_pad_frac": round(metrics.prefill_pad_frac, 3),
+            "mode": "continuous-paged"}))
+        return
 
     runner = run_sequential if args.no_pipeline else run_pipelined
     t0 = time.time()

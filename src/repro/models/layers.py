@@ -144,6 +144,30 @@ def mha_attention(q, k, v, q_pos, k_pos, *, window: Optional[int],
                          attn_softcap=attn_softcap)
 
 
+def mha_attention_paged(q, pool, block_tables, q_pos, *,
+                        window: Optional[int], scale: float,
+                        attn_softcap: Optional[float] = None):
+    """Decode attention against a paged KV pool (continuous batching).
+
+    q: (B,1,Hq,D); pool: {"pk"/"pv": (P,page,Hkv,D), "ppos": (P,page)};
+    block_tables: (B, pages_per_slot) physical page ids (-1 = none).
+
+    Dispatch: paged Pallas kernel (gathers pages in-kernel via scalar-
+    prefetched block tables) -> dense gather + reference attention.
+    """
+    from repro.core import kv_cache as KV
+    from repro.kernels import ops as kops
+    out = kops.maybe_paged_decode_attention(
+        q, pool["pk"], pool["pv"], pool["ppos"], block_tables, q_pos,
+        window=window, scale=scale, attn_softcap=attn_softcap)
+    if out is not None:
+        return out
+    kk, vv, kp = KV.paged_gather(pool, block_tables)
+    return mha_attention(q, kk.astype(q.dtype), vv.astype(q.dtype),
+                         q_pos, kp, window=window, scale=scale,
+                         attn_softcap=attn_softcap)
+
+
 def position_mask(q_pos, k_pos, window: Optional[int]):
     """(B,Sq,Sk) bool: causal, windowed, and k_pos>=0 validity."""
     m = (k_pos[:, None, :] <= q_pos[:, :, None]) & (k_pos[:, None, :] >= 0)

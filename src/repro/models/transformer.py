@@ -117,6 +117,25 @@ def cache_struct(cfg: ModelConfig, batch: int, max_len: int,
         functools.partial(init_cache, cfg, batch, max_len, dtype))
 
 
+def init_paged_cache(cfg: ModelConfig, *, num_pages: int, page_size: int,
+                     max_slots: int, max_len: int, dtype=jnp.bfloat16):
+    """Paged-pool model cache for continuous batching: attention layers
+    share ``num_pages`` fixed-size pages (+1 reserved dump page) indexed
+    through per-slot block tables; MLA / recurrent layers keep dense
+    per-slot state.  Same stacked-over-repeats layout as init_cache."""
+    layers = []
+    for stack in cfg.stacks:
+        per_pos = []
+        for spec in stack.pattern:
+            one = KV.paged_layer_cache_shape(cfg, spec, num_pages, page_size,
+                                             max_slots, max_len, dtype)
+            per_pos.append(jax.tree.map(
+                lambda a, r=stack.repeats: jnp.tile(
+                    a[None], (r,) + (1,) * a.ndim), one))
+        layers.append(tuple(per_pos))
+    return {"layers": tuple(layers)}
+
+
 # ---------------------------------------------------------------------------
 # One layer
 # ---------------------------------------------------------------------------
@@ -124,16 +143,19 @@ def cache_struct(cfg: ModelConfig, batch: int, max_len: int,
 
 def layer_apply(cfg: ModelConfig, spec: LayerSpec, p, x, *, positions,
                 cache_pos, cache, mode: str, max_len: int,
-                attend_cache: bool = False):
+                attend_cache: bool = False, paged=None):
     """Returns (x, new_cache, aux). cache is None in train mode.
     attend_cache: prefill continues from a pre-filled cache (prefix
     caching) — queries attend to cache contents, not just in-context k/v.
+    paged: {"block_tables": (B, pages), "active": (B,) bool | None} when
+    the cache uses the paged pool layout (continuous batching).
     """
     aux = jnp.zeros((), jnp.float32)
     B, S, _ = x.shape
     window = KV.effective_window(cfg, spec, max_len)
     h = L.apply_norm(cfg, p["norm1"], x)
     new_cache = None
+    is_paged = cache is not None and "pk" in cache
 
     # ----- mixer ----------------------------------------------------------
     if spec.mixer in (ATTN, HYBRID):
@@ -142,7 +164,28 @@ def layer_apply(cfg: ModelConfig, spec: LayerSpec, p, x, *, positions,
                  else cfg.rope_theta)
         q, k, v = L.attn_qkv(cfg, p["attn"], h, positions, theta=theta)
         scale = L.attn_scale(cfg)
-        if mode == "decode":
+        if is_paged:
+            if attend_cache:
+                raise NotImplementedError(
+                    "prefix caching is not supported on the paged path")
+            bt = paged["block_tables"]
+            pool = {n: cache[n] for n in KV.PAGED_KEYS}
+            ring = KV.paged_ring_len(window, pool["ppos"].shape[1],
+                                     bt.shape[1])
+            if mode == "decode":
+                c_attn = KV.paged_write_decode(
+                    pool, {"k": k, "v": v}, positions[:, 0], bt,
+                    paged.get("active"), ring_len=ring)
+                ctx = L.mha_attention_paged(
+                    q, c_attn, bt, positions, window=window, scale=scale,
+                    attn_softcap=cfg.attn_softcap)
+            else:                                   # admission prefill
+                ctx = L.mha_attention(q, k, v, positions, positions,
+                                      window=window, scale=scale,
+                                      attn_softcap=cfg.attn_softcap)
+                c_attn = KV.paged_write_prefill(
+                    pool, {"k": k, "v": v}, cache_pos, bt, ring_len=ring)
+        elif mode == "decode":
             c_attn = {n: cache[n] for n in ("k", "v", "pos")}
             c_attn = KV.write_decode(c_attn, {"k": k, "v": v}, positions[:, 0])
             ctx = L.mha_attention(q, c_attn["k"].astype(x.dtype),
@@ -235,7 +278,8 @@ def layer_apply(cfg: ModelConfig, spec: LayerSpec, p, x, *, positions,
 
 
 def _run_stack(cfg, stack: Stack, stack_p, stack_c, x, *, positions,
-               cache_pos, mode, max_len, remat, attend_cache=False):
+               cache_pos, mode, max_len, remat, attend_cache=False,
+               paged=None):
     has_cache = mode != "train"
 
     def body(carry, xs):
@@ -250,7 +294,7 @@ def _run_stack(cfg, stack: Stack, stack_p, stack_c, x, *, positions,
             xx, nc, a = layer_apply(cfg, spec, p_r[pi], xx,
                                     positions=positions, cache_pos=cache_pos,
                                     cache=c_r[pi], mode=mode, max_len=max_len,
-                                    attend_cache=attend_cache)
+                                    attend_cache=attend_cache, paged=paged)
             new_cs.append(nc)
             aux = aux + a
         return (xx, aux), (tuple(new_cs) if has_cache else None)
@@ -265,7 +309,7 @@ def _run_stack(cfg, stack: Stack, stack_p, stack_c, x, *, positions,
 
 
 def _run_all(cfg, params, x, *, positions, cache_pos, cache, mode, max_len,
-             remat=False, attend_cache=False):
+             remat=False, attend_cache=False, paged=None):
     new_layers = []
     aux = jnp.zeros((), jnp.float32)
     for si, stack in enumerate(cfg.stacks):
@@ -273,7 +317,7 @@ def _run_all(cfg, params, x, *, positions, cache_pos, cache, mode, max_len,
         x, nc, a = _run_stack(cfg, stack, params["stacks"][si], sc, x,
                               positions=positions, cache_pos=cache_pos,
                               mode=mode, max_len=max_len, remat=remat,
-                              attend_cache=attend_cache)
+                              attend_cache=attend_cache, paged=paged)
         new_layers.append(nc)
         aux = aux + a
     new_cache = {"layers": tuple(new_layers)} if cache is not None else None
@@ -368,7 +412,7 @@ def _mtp_forward(params, cfg, h, tokens, positions, policy):
 def forward_prefill(params, cfg: ModelConfig, tokens, prompt_lengths, cache,
                     *, prefix_embeds=None, policy: Policy = FP32,
                     max_len: Optional[int] = None, last_only: bool = False,
-                    start: int = 0):
+                    start: int = 0, paged=None):
     """Process full (right-padded) prompts, fill the cache.
 
     prompt_lengths: (B,) valid token count per row *including* prefix
@@ -389,7 +433,8 @@ def forward_prefill(params, cfg: ModelConfig, tokens, prompt_lengths, cache,
     x = _embed(cfg, params, tokens, prefix_embeds, positions, policy)
     x, cache, _ = _run_all(cfg, params, x, positions=positions,
                            cache_pos=cache_pos, cache=cache, mode="prefill",
-                           max_len=max_len, attend_cache=start > 0)
+                           max_len=max_len, attend_cache=start > 0,
+                           paged=paged)
     if last_only:
         x = jnp.take_along_axis(
             x, (prompt_lengths - 1)[:, None, None].astype(jnp.int32), axis=1)
@@ -399,7 +444,8 @@ def forward_prefill(params, cfg: ModelConfig, tokens, prompt_lengths, cache,
 
 
 def forward_decode(params, cfg: ModelConfig, tokens, cache, lengths, *,
-                   policy: Policy = FP32, max_len: Optional[int] = None):
+                   policy: Policy = FP32, max_len: Optional[int] = None,
+                   paged=None):
     """One new token per slot. tokens: (B,1); lengths: (B,) current context
     length (the new token's absolute position). Returns (logits, cache)."""
     B = tokens.shape[0]
@@ -408,7 +454,7 @@ def forward_decode(params, cfg: ModelConfig, tokens, cache, lengths, *,
     x = _embed(cfg, params, tokens, None, positions, policy)
     x, cache, _ = _run_all(cfg, params, x, positions=positions,
                            cache_pos=None, cache=cache, mode="decode",
-                           max_len=max_len)
+                           max_len=max_len, paged=paged)
     h_final = L.apply_norm(cfg, params["final_norm"], x)
     logits = policy.output_cast(L.unembed(cfg, params, h_final))
     return logits, cache

@@ -2,6 +2,9 @@
 RoPE shift property, masks."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.models import layers as L

@@ -1,0 +1,309 @@
+"""Continuous batching + paged KV cache (beyond-paper serving path).
+
+The contract: serve_continuous produces, for every request, exactly the
+greedy tokens that a dedicated unpadded single-request run produces —
+across attention, sliding-window, MLA and recurrent families — while
+admitting/retiring requests mid-flight from a shared page pool.
+"""
+import copy
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_reduced
+from repro.core import kv_cache as KV
+from repro.core.continuous import ContinuousScheduler, PageAllocator
+from repro.core.engine import InferenceEngine
+from repro.core.precision import FP32
+from repro.core.sampling import SamplingParams
+from repro.core.scheduler import Request
+from repro.kernels import ops as KOPS
+from repro.models import transformer as T
+
+
+def _requests(rng, cfg, lens_new):
+    return [Request(uid=i,
+                    tokens=[2] + list(map(int, rng.integers(
+                        4, min(cfg.vocab_size, 400), size=ln))),
+                    max_new_tokens=mn)
+            for i, (ln, mn) in enumerate(lens_new)]
+
+
+def _reference(eng, reqs):
+    out = {}
+    for r in reqs:
+        g = eng.generate_batch(np.asarray([r.tokens], np.int32),
+                               np.asarray([len(r.tokens)], np.int32),
+                               r.max_new_tokens)
+        row = g[0]
+        out[r.uid] = [int(t) for t in row[row >= 0]]
+    return out
+
+
+# one arch per cache family: dense attn, window+softcap, MLA latent,
+# recurrent, hybrid (window ring + SSM + conv)
+@pytest.mark.parametrize("arch", ["qwen3-4b", "gemma2-2b",
+                                  "deepseek-v3-671b", "xlstm-125m",
+                                  "hymba-1.5b"])
+def test_continuous_matches_single_request(arch, rng):
+    import dataclasses
+    cfg = get_reduced(arch)
+    if cfg.moe is not None:
+        # capacity-based MoE sheds tokens as a function of *batch
+        # composition* (a pre-existing property of the dense path too);
+        # give it headroom so the parity contract is well-defined.
+        cfg = cfg.replace(moe=dataclasses.replace(
+            cfg.moe, capacity_factor=float(cfg.moe.num_experts)))
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = InferenceEngine(cfg, params, policy=FP32, max_len=64, max_batch=2)
+    reqs = _requests(rng, cfg, [(5, 5), (11, 4), (3, 6), (20, 5)])
+    ref = _reference(eng, reqs)
+    done, metrics = eng.serve_continuous(copy.deepcopy(reqs), page_size=8,
+                                         steps_per_sync=3)
+    for r in done:
+        assert r.result == ref[r.uid], f"{arch} uid {r.uid}"
+    assert metrics.admitted == len(reqs)
+    assert metrics.retired == len(reqs)
+    assert metrics.generated_tokens == sum(len(v) for v in ref.values())
+
+
+@pytest.mark.parametrize("arch", ["deepseek-v3-671b", "xlstm-125m"])
+def test_continuous_batched_admission_equal_lengths(arch, rng):
+    """Same-length requests are admitted as ONE batched prefill dispatch;
+    dense per-slot state (MLA latent / recurrent) must land in each
+    request's own slot, not get broadcast from a single view row."""
+    import dataclasses
+    cfg = get_reduced(arch)
+    if cfg.moe is not None:
+        cfg = cfg.replace(moe=dataclasses.replace(
+            cfg.moe, capacity_factor=float(cfg.moe.num_experts)))
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = InferenceEngine(cfg, params, policy=FP32, max_len=64, max_batch=3)
+    reqs = _requests(rng, cfg, [(7, 4), (7, 4), (7, 4)])
+    ref = _reference(eng, reqs)
+    done, _ = eng.serve_continuous(copy.deepcopy(reqs), page_size=8,
+                                   steps_per_sync=2)
+    for r in done:
+        assert r.result == ref[r.uid], f"uid {r.uid}"
+
+
+def test_continuous_paged_kernel_interpret(rng):
+    """The in-model paged Pallas kernel (interpret mode) must not change
+    greedy outputs vs the gather + jnp fallback."""
+    cfg = get_reduced("qwen3-4b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = InferenceEngine(cfg, params, policy=FP32, max_len=64, max_batch=3)
+    reqs = _requests(rng, cfg, [(5, 4), (9, 4), (14, 4)])
+    ref = _reference(eng, reqs)
+    with KOPS.kernel_mode_ctx("interpret"):
+        done, _ = eng.serve_continuous(copy.deepcopy(reqs), page_size=8,
+                                       steps_per_sync=2)
+    for r in done:
+        assert r.result == ref[r.uid]
+
+
+def test_continuous_constrained_pool(rng):
+    """A pool too small to hold all requests at once still serves them all
+    (admission control queues the overflow until pages free up)."""
+    cfg = get_reduced("qwen3-4b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = InferenceEngine(cfg, params, policy=FP32, max_len=64, max_batch=3)
+    reqs = _requests(rng, cfg, [(5, 4), (9, 4), (3, 4), (14, 4), (7, 4)])
+    ref = _reference(eng, reqs)
+    done, metrics = eng.serve_continuous(copy.deepcopy(reqs), page_size=8,
+                                         num_pages=5, steps_per_sync=2)
+    for r in done:
+        assert r.result == ref[r.uid]
+    assert metrics.admitted == len(reqs)
+
+
+def test_continuous_budget_edges(rng):
+    """max_new_tokens of 0 and 1 retire at admission."""
+    cfg = get_reduced("qwen3-4b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = InferenceEngine(cfg, params, policy=FP32, max_len=64, max_batch=2)
+    reqs = _requests(rng, cfg, [(5, 0), (5, 1), (5, 3)])
+    ref = _reference(eng, reqs)
+    done, _ = eng.serve_continuous(copy.deepcopy(reqs), page_size=8)
+    assert done[0].result == []
+    assert done[1].result == ref[1][:1]
+    assert done[2].result == ref[2]
+
+
+def test_continuous_eos_at_admission(rng, monkeypatch):
+    """First sampled token == EOS -> empty result, slot freed cleanly."""
+    import repro.core.engine as E
+    from repro.core.tokenizer import EOS
+    monkeypatch.setattr(
+        E, "sample",
+        lambda logits, rng_, sp: jnp.full(logits.shape[:-1], EOS, jnp.int32))
+    cfg = get_reduced("qwen3-4b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = InferenceEngine(cfg, params, policy=FP32, max_len=64, max_batch=2)
+    reqs = _requests(rng, cfg, [(5, 4), (7, 4)])
+    done, metrics = eng.serve_continuous(reqs, page_size=8)
+    assert all(r.result == [] for r in done)
+    assert metrics.generated_tokens == 0
+
+
+def test_continuous_overlong_prompt_truncated(rng):
+    """A prompt beyond the context is left-truncated with a warning,
+    reserving the request's generation budget, and still served."""
+    cfg = get_reduced("qwen3-4b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = InferenceEngine(cfg, params, policy=FP32, max_len=64, max_batch=2)
+    toks = [2] + list(map(int, rng.integers(4, 400, size=200)))
+    reqs = [Request(uid=0, tokens=list(toks), max_new_tokens=4),
+            Request(uid=1, tokens=list(toks)[:8], max_new_tokens=4)]
+    with pytest.warns(UserWarning, match="exceeds the maximum"):
+        done, _ = eng.serve_continuous(reqs, page_size=8)
+    # recent context kept, budget reserved (64 - 4 = 60 tokens of prompt)
+    assert done[0].tokens == toks[-60:]
+    assert len(done[0].result) == 4
+    assert len(done[1].result) == 4
+
+
+def test_continuous_sampled_path(rng):
+    cfg = get_reduced("qwen3-4b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = InferenceEngine(cfg, params, policy=FP32, max_len=64, max_batch=2,
+                          seed=7)
+    reqs = _requests(rng, cfg, [(5, 6), (9, 6), (3, 6)])
+    done, _ = eng.serve_continuous(
+        reqs, SamplingParams(temperature=1.0, top_k=20), page_size=8)
+    for r in done:
+        assert r.result is not None and len(r.result) <= 6
+        assert all(0 <= t < cfg.vocab_size for t in r.result)
+
+
+def test_continuous_arrival_trace(rng):
+    """Open-loop arrivals: later requests are admitted mid-flight and
+    still match their single-request reference."""
+    cfg = get_reduced("qwen3-4b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = InferenceEngine(cfg, params, policy=FP32, max_len=64, max_batch=2)
+    reqs = _requests(rng, cfg, [(5, 5), (9, 5), (3, 5), (12, 5)])
+    ref = _reference(eng, reqs)
+    done, metrics = eng.serve_continuous(
+        copy.deepcopy(reqs), page_size=8,
+        arrivals=[0.0, 0.0, 0.05, 0.1])
+    for r in done:
+        assert r.result == ref[r.uid]
+    assert len(metrics.latency_s) == len(reqs)
+    assert metrics.percentile_latency(99) >= metrics.percentile_latency(50)
+
+
+# ---------------------------------------------------------------------------
+# Page allocator / scheduler unit tests
+# ---------------------------------------------------------------------------
+
+
+def test_page_allocator_alloc_free_exhaustion():
+    al = PageAllocator(4)
+    a = al.alloc(3)
+    assert a is not None and len(set(a)) == 3
+    assert al.alloc(2) is None          # only 1 left -> no partial alloc
+    assert al.free_count == 1
+    al.free(a)
+    assert al.free_count == 4
+    with pytest.raises(ValueError):
+        al.free(a)                      # double free
+    b = al.alloc(4)
+    with pytest.raises(ValueError):
+        al.free([99])                   # out of range
+    with pytest.raises(ValueError):
+        al.free([b[0], b[0]])           # duplicate ids in one call
+    al.free(b)
+
+
+def test_scheduler_fcfs_admit_retire():
+    sched = ContinuousScheduler(2, PageAllocator(4), page_size=8)
+    r1 = Request(uid=1, tokens=[2] * 10, max_new_tokens=6)   # 2 pages
+    r2 = Request(uid=2, tokens=[2] * 20, max_new_tokens=4)   # 3 pages
+    r3 = Request(uid=3, tokens=[2] * 3, max_new_tokens=4)    # 1 page
+    for r in (r1, r2, r3):
+        sched.submit(r)
+    s1 = sched.try_admit()
+    assert s1 is not None and s1[1].request.uid == 1
+    # head-of-line r2 needs 3 pages, only 2 free -> r3 must NOT jump it
+    assert sched.try_admit() is None
+    sched.slots[s1[0]].emitted = [7, 8]
+    st = sched.retire(s1[0])
+    assert st.request.result == [7, 8]
+    s2 = sched.try_admit()
+    assert s2 is not None and s2[1].request.uid == 2
+    s3 = sched.try_admit()
+    assert s3 is not None and s3[1].request.uid == 3
+    sched.retire(s2[0])
+    sched.retire(s3[0])
+    # every page back in the pool after all retirements
+    assert sched.allocator.free_count == 4
+    with pytest.raises(ValueError):
+        sched.allocator.free([0, 0])         # dup ids in one call
+
+
+def test_paged_write_gather_roundtrip(rng):
+    """paged write (prefill + decode) then gather == the dense positions
+    and values that were written."""
+    P, page, H, D = 6, 8, 2, 16
+    pool = {"pk": jnp.zeros((P, page, H, D)),
+            "pv": jnp.zeros((P, page, H, D)),
+            "ppos": jnp.full((P, page), -1, jnp.int32)}
+    bt = jnp.asarray([[0, 3, -1, -1]], jnp.int32)
+    S = 11
+    k = jnp.asarray(rng.normal(size=(1, S, H, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, S, H, D)), jnp.float32)
+    cache_pos = jnp.asarray([[0, 1, 2, 3, 4, 5, 6, 7, 8, -1, -1]], jnp.int32)
+    ring = KV.paged_ring_len(None, page, 4)
+    pool = KV.paged_write_prefill(pool, {"k": k, "v": v}, cache_pos, bt,
+                                  ring_len=ring)
+    kk, vv, kp = KV.paged_gather(pool, bt)
+    assert kk.shape == (1, 4 * page, H, D)
+    np.testing.assert_array_equal(np.asarray(kp[0, :9]), np.arange(9))
+    assert (np.asarray(kp[0, 9:]) == -1).all()
+    np.testing.assert_allclose(np.asarray(kk[0, :9]), np.asarray(k[0, :9]),
+                               rtol=1e-6)
+    # decode write at position 9, then at 10
+    for t in range(9, 11):
+        pool = KV.paged_write_decode(
+            pool, {"k": k[:, t:t + 1], "v": v[:, t:t + 1]},
+            jnp.asarray([t], jnp.int32), bt,
+            jnp.asarray([True]), ring_len=ring)
+    kk, vv, kp = KV.paged_gather(pool, bt)
+    np.testing.assert_array_equal(np.asarray(kp[0, :11]), np.arange(11))
+    np.testing.assert_allclose(np.asarray(vv[0, :11]), np.asarray(v[0]),
+                               rtol=1e-6)
+    # inactive write goes to the dump page, not the slot's pages
+    pool2 = KV.paged_write_decode(
+        pool, {"k": k[:, :1] + 99, "v": v[:, :1]},
+        jnp.asarray([3], jnp.int32), bt,
+        jnp.asarray([False]), ring_len=ring)
+    np.testing.assert_allclose(np.asarray(pool2["pk"][0]),
+                               np.asarray(pool["pk"][0]), rtol=0)
+    assert int(pool2["ppos"][P - 1].max()) == -1
+
+
+def test_windowed_ring_reuses_pages(rng):
+    """A windowed layer cycles within ceil((W+1)/page) logical pages and
+    stored positions keep the mask exact past the window."""
+    P, page, H, D = 4, 8, 1, 8
+    window = 11                          # ring = 2 pages = 16 slots
+    ring = KV.paged_ring_len(window, page, 3)
+    assert ring == 16
+    pool = {"pk": jnp.zeros((P, page, H, D)),
+            "pv": jnp.zeros((P, page, H, D)),
+            "ppos": jnp.full((P, page), -1, jnp.int32)}
+    bt = jnp.asarray([[1, 2, 0]], jnp.int32)
+    for t in range(40):
+        kv = jnp.full((1, 1, H, D), float(t))
+        pool = KV.paged_write_decode(pool, {"k": kv, "v": kv},
+                                     jnp.asarray([t], jnp.int32), bt,
+                                     None, ring_len=ring)
+    # logical page 2 (physical 0) never touched by the ring
+    assert int(pool["ppos"][0].max()) == -1
+    kk, _, kp = KV.paged_gather(pool, bt)
+    live = np.asarray(kp[0])
+    # the ring holds exactly the last 16 positions
+    assert set(live[live >= 0]) == set(range(24, 40))

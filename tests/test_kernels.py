@@ -94,6 +94,82 @@ def test_decode_attention_sweep(rng, B, Sk, Hq, Hkv, D, Dv, window, cap,
                                np.asarray(ref, np.float32), **_tol(dtype))
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,P,page,npages,Hq,Hkv,D,Dv,window,cap",
+    [
+        (2, 9, 16, 4, 4, 4, 64, 64, None, None),      # MHA
+        (3, 13, 32, 3, 8, 2, 64, 64, None, None),     # GQA 4:1
+        (2, 9, 16, 4, 16, 4, 128, 128, 24, None),     # GQA + window
+        (2, 9, 16, 4, 4, 2, 64, 64, None, 50.0),      # softcap (gemma2)
+        (1, 7, 16, 4, 6, 2, 32, 32, 20, 30.0),        # window + cap
+        (1, 9, 32, 3, 8, 8, 192, 128, None, None),    # MLA-ish Dv != D
+    ])
+def test_paged_decode_attention_sweep(rng, B, P, page, npages, Hq, Hkv, D,
+                                      Dv, window, cap, dtype):
+    """Paged kernel vs the dense-gather oracle: random block tables with
+    unallocated holes, ring-style partial pages, per-slot query positions."""
+    kpool = _rand(rng, (P, page, Hkv, D), dtype)
+    vpool = _rand(rng, (P, page, Hkv, Dv), dtype)
+    ppos = np.full((P, page), -1, np.int32)
+    bt = np.full((B, npages), -1, np.int32)
+    perm = rng.permutation(P - 1)           # page P-1 stays the dump page
+    q_pos = np.zeros((B, 1), np.int32)
+    next_page = 0
+    for b in range(B):
+        ctx = int(rng.integers(1, npages * page))
+        q_pos[b, 0] = ctx - 1
+        used = -(-ctx // page)
+        bt[b, :used] = perm[next_page:next_page + used]
+        next_page += used
+        for t in range(ctx):
+            ppos[bt[b, t // page], t % page] = t
+    q = _rand(rng, (B, 1, Hq, D), dtype)
+    assert DA.paged_shape_supported(q, kpool, jnp.asarray(bt))
+    out = DA.paged_decode_attention(q, kpool, vpool, jnp.asarray(ppos),
+                                    jnp.asarray(bt), jnp.asarray(q_pos),
+                                    window=window, scale=D ** -0.5,
+                                    attn_softcap=cap, interpret=True)
+    ref = R.paged_decode_attention_ref(q, kpool, vpool, jnp.asarray(ppos),
+                                       jnp.asarray(bt), jnp.asarray(q_pos),
+                                       window=window, scale=D ** -0.5,
+                                       attn_softcap=cap)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+    assert np.abs(np.asarray(out, np.float32)
+                  - np.asarray(ref, np.float32)).max() <= 1e-2
+
+
+def test_paged_decode_matches_dense_decode(rng):
+    """The paged kernel over a scattered pool == the dense decode kernel
+    over the equivalent contiguous cache."""
+    B, P, page, npages, H, D = 2, 9, 32, 4, 4, 64
+    kpool = _rand(rng, (P, page, H, D), jnp.float32)
+    vpool = _rand(rng, (P, page, H, D), jnp.float32)
+    ppos = np.full((P, page), -1, np.int32)
+    bt = np.asarray([[3, 0, 6, -1], [5, 2, -1, -1]], np.int32)
+    q_pos = np.asarray([[100], [50]], np.int32)
+    for b in range(B):
+        for t in range(int(q_pos[b, 0]) + 1):
+            if t // page < npages and bt[b, t // page] >= 0:
+                ppos[bt[b, t // page], t % page] = t
+    q = _rand(rng, (B, 1, H, D), jnp.float32)
+    out = DA.paged_decode_attention(q, kpool, vpool, jnp.asarray(ppos),
+                                    jnp.asarray(bt), jnp.asarray(q_pos),
+                                    window=None, scale=D ** -0.5,
+                                    interpret=True)
+    # densify: gather pages into (B, npages*page, H, D)
+    safe = np.where(bt >= 0, bt, P - 1)
+    kd = jnp.asarray(np.asarray(kpool)[safe].reshape(B, npages * page, H, D))
+    vd = jnp.asarray(np.asarray(vpool)[safe].reshape(B, npages * page, H, D))
+    kp = np.where(bt[..., None] >= 0, np.asarray(ppos)[safe], -1)
+    kp = jnp.asarray(kp.reshape(B, npages * page))
+    ref = DA.decode_attention(q, kd, vd, kp, jnp.asarray(q_pos),
+                              window=None, scale=D ** -0.5, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.float16])
 @pytest.mark.parametrize("shape", [(4, 256), (2, 64, 512), (1, 8, 128)])
 def test_rmsnorm_sweep(rng, shape, dtype):

@@ -1,0 +1,146 @@
+"""Bucket-batcher edge cases, prompt-overflow policy, and engine stats —
+coverage the seed lacked (ISSUE-1 satellites)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_reduced
+from repro.core.engine import EngineStats, InferenceEngine
+from repro.core.precision import FP32
+from repro.core.scheduler import (DEFAULT_BUCKETS, Batch, DynamicBatcher,
+                                  PromptOverflowError, Request, pad_batch,
+                                  pick_bucket, truncate_prompt)
+from repro.models import transformer as T
+
+# ---------------------------------------------------------------------------
+# DynamicBatcher
+# ---------------------------------------------------------------------------
+
+
+def test_empty_queue_returns_none():
+    b = DynamicBatcher(max_batch=4)
+    assert b.pending() == 0
+    assert b.next_batch() is None
+
+
+def test_oversize_batch_splits():
+    b = DynamicBatcher(max_batch=3)
+    for i in range(8):
+        b.add(Request(uid=i, tokens=[2] * 10))
+    sizes = []
+    while (batch := b.next_batch()) is not None:
+        sizes.append(batch.size)
+        assert batch.size <= 3
+    assert sum(sizes) == 8
+
+
+def test_mixed_buckets_grouping():
+    b = DynamicBatcher(max_batch=8)
+    lens = [5, 40, 7, 100, 31, 33]
+    for i, ln in enumerate(lens):
+        b.add(Request(uid=i, tokens=[2] * ln))
+    batches = []
+    while (batch := b.next_batch()) is not None:
+        batches.append(batch)
+        # every request in a batch shares the batch's bucket
+        for r in batch.requests:
+            assert pick_bucket(r.prompt_len, DEFAULT_BUCKETS) \
+                == batch.padded_len
+    assert sorted(b_.padded_len for b_ in batches) == [32, 64, 128]
+
+
+def test_unsorted_batcher_keeps_fifo_grouping():
+    b = DynamicBatcher(max_batch=4, sort_by_length=False)
+    for i, ln in enumerate([100, 5, 101]):
+        b.add(Request(uid=i, tokens=[2] * ln))
+    first = b.next_batch()
+    assert [r.uid for r in first.requests] == [0, 2]   # head bucket = 128
+
+
+# ---------------------------------------------------------------------------
+# Prompt overflow policy (was: silent clamp to buckets[-1] + slice)
+# ---------------------------------------------------------------------------
+
+
+def test_overlong_prompt_truncates_left_with_warning():
+    limit = DEFAULT_BUCKETS[-1]
+    toks = list(range(limit + 50))
+    b = DynamicBatcher(max_batch=2)
+    with pytest.warns(UserWarning, match="exceeds the maximum"):
+        b.add(Request(uid=0, tokens=toks))
+    batch = b.next_batch()
+    # the *last* `limit` tokens survive (recent context conditions
+    # generation), not the first
+    assert batch.requests[0].tokens == toks[-limit:]
+    padded, lens = pad_batch(batch)
+    assert padded.shape == (1, limit) and lens[0] == limit
+
+
+def test_overlong_prompt_reject_mode():
+    b = DynamicBatcher(max_batch=2, overflow="reject")
+    with pytest.raises(PromptOverflowError):
+        b.add(Request(uid=0, tokens=[2] * (DEFAULT_BUCKETS[-1] + 1)))
+
+
+def test_pad_batch_refuses_silent_clip():
+    batch = Batch(requests=[Request(uid=0, tokens=[2] * 40)], padded_len=32)
+    with pytest.raises(PromptOverflowError):
+        pad_batch(batch)
+
+
+def test_truncate_prompt_noop_within_limit():
+    toks = [1, 2, 3]
+    assert truncate_prompt(toks, 8) is toks
+
+
+def test_serve_bounds_buckets_to_engine_context(rng):
+    """engine.serve must never prefill wider than its own max_len: a
+    prompt that fits a DEFAULT bucket but not the engine context is
+    truncated (loudly), not silently scattered past the cache."""
+    cfg = get_reduced("unimo-text")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = InferenceEngine(cfg, params, policy=FP32, max_len=64, max_batch=2)
+    assert eng.prompt_buckets() == (32, 64)
+    toks = [2] + list(map(int, rng.integers(4, 800, size=100)))
+    with pytest.warns(UserWarning, match="exceeds the maximum"):
+        done = eng.serve([Request(uid=0, tokens=toks, max_new_tokens=4)])
+    assert done[0].tokens == toks[-64:]
+    assert done[0].result is not None
+
+
+# ---------------------------------------------------------------------------
+# EngineStats
+# ---------------------------------------------------------------------------
+
+
+def test_engine_stats_merge_sums_every_field():
+    a = EngineStats(prefill_s=1.0, decode_s=2.0, nocache_s=0.5,
+                    prompt_tokens=10, generated_tokens=20, batches=1)
+    b = EngineStats(prefill_s=0.25, decode_s=0.75, nocache_s=1.5,
+                    prompt_tokens=5, generated_tokens=2, batches=3)
+    a.merge(b)
+    assert a == EngineStats(prefill_s=1.25, decode_s=2.75, nocache_s=2.0,
+                            prompt_tokens=15, generated_tokens=22, batches=4)
+
+
+# ---------------------------------------------------------------------------
+# EOS at the first sampled token (engine KV path)
+# ---------------------------------------------------------------------------
+
+
+def test_generate_kv_eos_first_token(monkeypatch):
+    """If the very first sampled token is EOS, the row emits nothing and
+    the fused greedy loop must not resurrect it."""
+    import repro.core.engine as E
+    from repro.core.tokenizer import EOS
+    monkeypatch.setattr(
+        E, "sample",
+        lambda logits, rng_, sp: jnp.full(logits.shape[:-1], EOS, jnp.int32))
+    cfg = get_reduced("unimo-text")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = InferenceEngine(cfg, params, policy=FP32, max_len=64)
+    toks = np.asarray([[2, 5, 9, 11], [2, 7, 0, 0]], np.int32)
+    out = eng.generate_batch(toks, np.asarray([4, 2], np.int32), 6)
+    assert (out == -1).all()
+    assert eng.stats.generated_tokens == 0

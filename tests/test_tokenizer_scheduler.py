@@ -1,5 +1,8 @@
 """Faster-Tokenizer + dynamic batching properties (paper P4)."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.scheduler import (DEFAULT_BUCKETS, DynamicBatcher, Request,
