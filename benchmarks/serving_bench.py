@@ -1,17 +1,29 @@
-"""Serving benchmark: bucket (drain-the-batch) vs continuous batching.
+"""Serving benchmark: bucket vs continuous batching vs prefix-cached.
 
-Drives one mixed-length request trace through both request-level paths of
-the engine and reports tokens/s, per-request completion latency (p50/p99),
-and padding/idle waste:
+Drives one request trace through the request-level paths of the engine
+and reports tokens/s, per-request completion latency (p50/p99), and
+padding/idle/prefill waste:
 
   * bucket:      DynamicBatcher -> generate_batch per bucket, every request
                  in a batch decodes until the batch's longest one finishes
   * continuous:  persistent decode slots + paged KV pool; admit on free
                  slot, retire at EOS (engine.serve_continuous)
+  * continuous+prefix: the radix prefix cache maps shared prompt-prefix
+                 pages zero-copy and prefills only each request's suffix
+
+Two trace shapes:
+  * mixed:  short-head/long-tail prompt lengths (the paper's Fig.-3
+            observation), no intentional sharing
+  * shared: N requests over --prefix-groups distinct system prompts —
+            the multi-tenant workload prefix caching targets
+
+Results are also written as machine-readable JSON (--out, default
+``BENCH_serving.json``) so the perf trajectory is tracked across PRs.
 
 Usage:
     PYTHONPATH=src python benchmarks/serving_bench.py \
-        --arch unimo-text --requests 24 --max-batch 4 [--poisson 20]
+        --arch unimo-text --requests 64 --max-batch 8 [--poisson 20] \
+        [--trace shared --prefix-groups 8 --prefix-len 64]
 
 CPU-friendly by default (reduced config, small trace); the same trace
 shapes run unchanged on TPU.
@@ -19,6 +31,7 @@ shapes run unchanged on TPU.
 from __future__ import annotations
 
 import argparse
+import copy
 import json
 import time
 
@@ -45,6 +58,27 @@ def build_trace(n: int, seed: int, vocab: int, max_prompt: int,
                         4, vocab, size=int(lens[i]) - 1))),
                     max_new_tokens=int(news[i]))
             for i in range(n)]
+    return reqs
+
+
+def build_shared_trace(n: int, seed: int, vocab: int, groups: int,
+                       prefix_len: int, suffix_max: int, max_new: int):
+    """Shared-prefix trace: ``n`` requests over ``groups`` distinct
+    system prompts of ``prefix_len`` tokens, each with its own short
+    suffix — the multi-tenant serving shape where cross-request KV reuse
+    pays."""
+    rng = np.random.default_rng(seed)
+    prefixes = [[2] + list(map(int, rng.integers(4, vocab,
+                                                 size=prefix_len - 1)))
+                for _ in range(groups)]
+    reqs = []
+    for i in range(n):
+        g = int(rng.integers(0, groups))
+        suffix = list(map(int, rng.integers(
+            4, vocab, size=int(rng.integers(2, suffix_max + 1)))))
+        reqs.append(Request(uid=i, tokens=prefixes[g] + suffix,
+                            max_new_tokens=int(rng.integers(
+                                max(2, max_new // 2), max_new + 1))))
     return reqs
 
 
@@ -109,11 +143,14 @@ def run_bucket(engine: InferenceEngine, reqs, sp, arrivals=None) -> dict:
 
 
 def run_continuous(engine: InferenceEngine, reqs, sp, *, page_size,
-                   steps_per_sync, arrivals=None) -> dict:
+                   steps_per_sync, arrivals=None, prefix_cache=False,
+                   num_pages=None) -> dict:
     t0 = time.perf_counter()
     _, m = engine.serve_continuous(reqs, sp, page_size=page_size,
+                                   num_pages=num_pages,
                                    steps_per_sync=steps_per_sync,
-                                   arrivals=arrivals)
+                                   arrivals=arrivals,
+                                   prefix_cache=prefix_cache)
     wall = time.perf_counter() - t0
     return {
         "wall_s": round(wall, 3),
@@ -123,6 +160,12 @@ def run_continuous(engine: InferenceEngine, reqs, sp, *, page_size,
         "p99_latency_s": round(m.percentile_latency(99), 3),
         "prefill_pad_frac": round(m.prefill_pad_frac, 3),
         "decode_idle_frac": round(m.decode_idle_frac, 3),
+        "prefill_tokens": m.prefill_tokens,
+        "prefix_hit_rate": round(m.prefix_hit_rate, 3),
+        "prefix_matched_tokens": m.prefix_matched_tokens,
+        "pages_shared": m.pages_shared,
+        "cow_copies": m.cow_copies,
+        "prefix_evicted_pages": m.prefix_evicted_pages,
     }
 
 
@@ -135,12 +178,24 @@ def main():
     ap.add_argument("--max-new-tokens", type=int, default=48)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="page pool size (default: slots * pages-per-slot"
+                         "; give the radix cache headroom to retain "
+                         "prefixes by sizing above the slot minimum)")
     ap.add_argument("--steps-per-sync", type=int, default=8)
     ap.add_argument("--policy", default="fp32",
                     choices=["fp32", "bf16", "fp16"])
     ap.add_argument("--poisson", type=float, default=None,
                     help="arrival rate (req/s) for an open-loop trace; "
                          "default: all requests arrive at t=0")
+    ap.add_argument("--trace", default="mixed", choices=["mixed", "shared"],
+                    help="mixed: lognormal lengths; shared: N requests "
+                         "over --prefix-groups shared system prompts")
+    ap.add_argument("--prefix-groups", type=int, default=8)
+    ap.add_argument("--prefix-len", type=int, default=64)
+    ap.add_argument("--suffix-max", type=int, default=12)
+    ap.add_argument("--out", default="BENCH_serving.json",
+                    help="machine-readable results path ('' to skip)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -155,39 +210,74 @@ def main():
                                max_batch=args.max_batch,
                                max_len=args.max_len)
 
-    max_prompt = args.max_len - args.max_new_tokens
-    trace = build_trace(args.requests, args.seed, min(cfg.vocab_size, 800),
-                        max_prompt, args.max_new_tokens)
+    vocab = min(cfg.vocab_size, 800)
+    if args.trace == "shared":
+        trace = build_shared_trace(
+            args.requests, args.seed, vocab, args.prefix_groups,
+            min(args.prefix_len, args.max_len - args.max_new_tokens
+                - args.suffix_max),
+            args.suffix_max, args.max_new_tokens)
+    else:
+        trace = build_trace(args.requests, args.seed, vocab,
+                            args.max_len - args.max_new_tokens,
+                            args.max_new_tokens)
     arrivals = None
     if args.poisson:
         rng = np.random.default_rng(args.seed + 1)
         arrivals = list(np.cumsum(
             rng.exponential(1.0 / args.poisson, size=len(trace))))
 
-    import copy
-    # warm up compilation on both paths with the full trace shape set so
+    # warm up compilation on every path with the full trace shape set so
     # the numbers compare steady-state serving, not tracing time
     eng = fresh_engine()
     run_bucket(eng, copy.deepcopy(trace), sp)
     bucket = run_bucket(eng, copy.deepcopy(trace), sp, arrivals=arrivals)
 
     eng = fresh_engine()
-    run_continuous(eng, copy.deepcopy(trace), sp, page_size=args.page_size,
+    run_continuous(eng, copy.deepcopy(trace), sp, page_size=args.page_size, num_pages=args.num_pages,
                    steps_per_sync=args.steps_per_sync)
-    cont = run_continuous(eng, copy.deepcopy(trace), sp,
-                          page_size=args.page_size,
+    cont_reqs = copy.deepcopy(trace)
+    cont = run_continuous(eng, cont_reqs, sp,
+                          page_size=args.page_size, num_pages=args.num_pages,
                           steps_per_sync=args.steps_per_sync,
                           arrivals=arrivals)
 
+    eng = fresh_engine()
+    run_continuous(eng, copy.deepcopy(trace), sp, page_size=args.page_size, num_pages=args.num_pages,
+                   steps_per_sync=args.steps_per_sync, prefix_cache=True)
+    # measured run starts from a COLD radix trie (warm compilation): all
+    # sharing observed below happens within the measured trace itself
+    eng.reset_prefix_cache()
+    pfx_reqs = copy.deepcopy(trace)
+    pfx = run_continuous(eng, pfx_reqs, sp, page_size=args.page_size, num_pages=args.num_pages,
+                         steps_per_sync=args.steps_per_sync,
+                         arrivals=arrivals, prefix_cache=True)
+
+    identical = all(a.result == b.result
+                    for a, b in zip(cont_reqs, pfx_reqs))
     speedup = (cont["tokens_per_s"] / bucket["tokens_per_s"]
                if bucket["tokens_per_s"] else float("nan"))
-    print(json.dumps({
+    pfx_speedup = (pfx["tokens_per_s"] / cont["tokens_per_s"]
+                   if cont["tokens_per_s"] else float("nan"))
+    report = {
         "arch": args.arch, "requests": args.requests,
         "slots": args.max_batch, "max_new": args.max_new_tokens,
-        "poisson_rate": args.poisson,
+        "trace": args.trace, "poisson_rate": args.poisson,
+        "prefix_groups": args.prefix_groups if args.trace == "shared"
+        else None,
         "bucket": bucket, "continuous": cont,
+        "continuous_prefix": pfx,
         "continuous_speedup_tokens_per_s": round(speedup, 3),
-    }, indent=2))
+        "prefix_speedup_tokens_per_s": round(pfx_speedup, 3),
+        "prefill_tokens_saved": cont["prefill_tokens"]
+        - pfx["prefill_tokens"],
+        "outputs_identical_prefix_on_off": identical,
+    }
+    print(json.dumps(report, indent=2))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote {args.out}")
 
 
 if __name__ == "__main__":

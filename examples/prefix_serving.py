@@ -1,9 +1,17 @@
 """Prefix caching end to end (beyond-paper; EXPERIMENTS.md §Perf):
-precompute a shared system-prompt's KV/state cache once, then serve many
-requests that only prefill their suffixes.
+requests that share a system prompt map its KV *pages* zero-copy out of
+the radix prefix cache and only prefill their own suffixes — the paper's
+"extract relevant content offline" applied across requests.
+
+Two flavours are shown:
+  1. automatic: serve a shared-prefix trace twice, cold trie vs warm —
+     matching happens per request with no API calls at all;
+  2. seeded: ``engine.set_prefix`` prefill-and-pins the system prompt
+     up front, so even the very first request skips it.
 
     PYTHONPATH=src python examples/prefix_serving.py
 """
+import copy
 import time
 
 import jax
@@ -12,42 +20,71 @@ import numpy as np
 from repro.configs.registry import get_reduced
 from repro.core.engine import InferenceEngine
 from repro.core.precision import FP32
+from repro.core.scheduler import Request
 from repro.models import transformer as T
 
 
+def build_requests(rng, system_prompt, n=8, suffix=8, max_new=8):
+    return [Request(uid=i,
+                    tokens=system_prompt + list(map(int, rng.integers(
+                        4, 400, size=suffix))),
+                    max_new_tokens=max_new)
+            for i in range(n)]
+
+
+def serve(eng, reqs, **kw):
+    t0 = time.perf_counter()
+    done, metrics = eng.serve_continuous(copy.deepcopy(reqs), page_size=8,
+                                         **kw)
+    return done, metrics, time.perf_counter() - t0
+
+
 def main():
-    cfg = get_reduced("gemma2-2b")
+    cfg = get_reduced("qwen3-4b")
     params = T.init_params(jax.random.PRNGKey(0), cfg)
-    eng = InferenceEngine(cfg, params, policy=FP32, max_len=160)
     rng = np.random.default_rng(0)
-
     system_prompt = [2] + list(rng.integers(4, 400, size=63))   # 64 tokens
-    suffixes = rng.integers(4, 400, size=(4, 8)).astype(np.int32)
-    lens = np.full(4, 8, np.int32)
+    reqs = build_requests(rng, system_prompt)
 
-    # without prefix caching: full prompts every time
-    full = np.concatenate(
-        [np.tile(system_prompt, (4, 1)).astype(np.int32), suffixes], axis=1)
-    flens = np.full(4, full.shape[1], np.int32)
-    eng.generate_batch(full.copy(), flens.copy(), 8)            # warm
-    t0 = time.perf_counter()
-    g_full = eng.generate_batch(full, flens, 8)
-    t_full = time.perf_counter() - t0
+    eng = InferenceEngine(cfg, params, policy=FP32, max_len=96, max_batch=4)
 
-    # with prefix caching: the 64-token system prompt is prefilled ONCE
-    eng.set_prefix(system_prompt)
-    eng.generate_batch(suffixes.copy(), lens.copy(), 8)         # warm
-    t0 = time.perf_counter()
-    g_pc = eng.generate_batch(suffixes, lens, 8)
-    t_pc = time.perf_counter() - t0
+    # -- baseline: sharing disabled — every request prefills 72 tokens
+    serve(eng, reqs, prefix_cache=False)                        # warm jit
+    done_off, m_off, t_off = serve(eng, reqs, prefix_cache=False)
 
-    assert (g_full == g_pc).all(), "prefix caching must be exact"
-    print(f"full-prompt serve : {t_full*1e3:7.1f} ms "
-          f"(prefill {full.shape[1]} tokens/slot)")
-    print(f"prefix-cached     : {t_pc*1e3:7.1f} ms "
-          f"(prefill {suffixes.shape[1]} tokens/slot)")
-    print(f"outputs identical; speedup {t_full/t_pc:.2f}x — the paper's "
-          f"'extract relevant content offline' applied to KV state")
+    # -- automatic radix matching (cold trie: the first request in each
+    #    slot seeds it, the rest match and skip the system prompt)
+    serve(eng, reqs, prefix_cache=True)                         # warm jit
+    eng.reset_prefix_cache()
+    done_cold, m_cold, t_cold = serve(eng, reqs, prefix_cache=True)
+
+    # -- seeded: set_prefix pins the system prompt before any traffic
+    eng.reset_prefix_cache()
+    eng.set_prefix(system_prompt, page_size=8)
+    serve(eng, reqs, prefix_cache=True)                         # warm jit
+    eng.reset_prefix_cache()
+    eng.set_prefix(system_prompt, page_size=8)
+    done_seed, m_seed, t_seed = serve(eng, reqs, prefix_cache=True)
+
+    for a, b, c in zip(done_off, done_cold, done_seed):
+        assert a.result == b.result == c.result, "prefix caching must be exact"
+
+    plen = len(system_prompt) + 8
+    print(f"no sharing    : {t_off*1e3:7.1f} ms  "
+          f"(prefill {m_off.prefill_tokens} tokens over {len(reqs)} "
+          f"requests of {plen})")
+    print(f"radix, cold   : {t_cold*1e3:7.1f} ms  "
+          f"(prefill {m_cold.prefill_tokens}, matched "
+          f"{m_cold.prefix_matched_tokens}, hit-rate "
+          f"{m_cold.prefix_hit_rate:.0%})")
+    print(f"radix, seeded : {t_seed*1e3:7.1f} ms  "
+          f"(prefill {m_seed.prefill_tokens}, matched "
+          f"{m_seed.prefix_matched_tokens}, hit-rate "
+          f"{m_seed.prefix_hit_rate:.0%}, hits {m_seed.prefix_hits}/"
+          f"{len(reqs)})")
+    print(f"outputs identical; prefill-token reduction "
+          f"{1 - m_seed.prefill_tokens / m_off.prefill_tokens:.0%} — "
+          f"shared pages are mapped copy-on-write, never recomputed")
 
 
 if __name__ == "__main__":

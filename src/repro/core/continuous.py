@@ -6,9 +6,11 @@ decodes until the *longest* one finishes, and each batch allocates a fresh
 dense cache.  Here, a fixed set of decode *slots* runs forever; requests
 are admitted into free slots mid-flight and retired at EOS, so the decode
 step is always as full as the traffic allows.  KV memory is a shared pool
-of fixed-size pages (see ``kv_cache.PAGED_KEYS``): pages are allocated on
-admit and freed on retire, so memory tracks the *actual* context lengths
-instead of slots * max_len.
+of fixed-size pages (see ``kv_cache.PAGED_KEYS``): pages are refcounted —
+allocated on admit, released on retire, and *shared* across requests with
+a common prompt prefix through :class:`~repro.core.prefix_cache.
+RadixPrefixCache` (a shared page is never written; copy-on-write hands
+the writer a fresh copy of a partial tail page).
 
 This module is host-side bookkeeping only (allocator, slot states, trace
 metrics); the device side lives in ``engine.serve_continuous`` (jitted
@@ -26,40 +28,94 @@ from repro.core.scheduler import Request
 
 
 class PageAllocator:
-    """Free-list allocator over ``num_pages`` physical pages.
+    """Refcounted free-list allocator over ``num_pages`` physical pages.
 
     Page ids are 0..num_pages-1; the engine reserves one extra pool page
     (id num_pages) as the dump page, which is never handed out.
+    ``alloc`` hands out pages at refcount 1; ``incref`` adds a sharer
+    (prefix cache or another request); ``decref`` releases one reference
+    and returns the page to the free list at zero.  Refcounts can never
+    go negative — a decref of an unallocated page raises.
     """
 
     def __init__(self, num_pages: int):
         self.num_pages = num_pages
         self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self._ref: Dict[int, int] = {}
 
     @property
     def free_count(self) -> int:
         return len(self._free)
 
+    @property
+    def allocated_count(self) -> int:
+        return len(self._ref)
+
+    def refcount(self, page: int) -> int:
+        return self._ref.get(page, 0)
+
     def alloc(self, n: int) -> Optional[List[int]]:
-        """n pages, or None (and no change) if the pool can't cover it."""
+        """n pages at refcount 1, or None (and no change) if the pool
+        can't cover it."""
         if n > len(self._free):
             return None
         pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self._ref[p] = 1
         return pages
 
+    def incref(self, page: int) -> None:
+        if page not in self._ref:
+            raise ValueError(f"incref of unallocated page {page}")
+        self._ref[page] += 1
+
+    def decref(self, page: int) -> None:
+        if not (0 <= page < self.num_pages):
+            raise ValueError(f"bad page id {page}")
+        c = self._ref.get(page, 0)
+        if c <= 0:
+            raise ValueError(f"refcount of page {page} would go negative")
+        if c == 1:
+            del self._ref[page]
+            self._free.append(page)
+        else:
+            self._ref[page] = c - 1
+
     def free(self, pages: List[int]) -> None:
+        """Release one reference on each page.  Atomic: the whole batch
+        is validated (ids in range, enough references to cover duplicate
+        entries) before any page is released."""
         for p in pages:
             if not (0 <= p < self.num_pages):
                 raise ValueError(f"bad page id {p}")
-        if len(set(pages)) != len(pages) or set(pages) & set(self._free):
-            raise ValueError("double free")
-        self._free.extend(pages)
+            if pages.count(p) > self._ref.get(p, 0):
+                raise ValueError(f"over-free of page {p}")
+        for p in pages:
+            self.decref(p)
+
+    def check(self) -> None:
+        """Pool accounting invariant: every page is either free or has a
+        positive refcount, exactly once."""
+        if len(set(self._free)) != len(self._free):
+            raise AssertionError("duplicate pages in the free list")
+        if set(self._free) & set(self._ref):
+            raise AssertionError("page both free and allocated")
+        if len(self._free) + len(self._ref) != self.num_pages:
+            raise AssertionError(
+                f"leak: {len(self._free)} free + {len(self._ref)} resident "
+                f"!= {self.num_pages} pool pages")
+        if any(c <= 0 for c in self._ref.values()):
+            raise AssertionError("non-positive refcount")
 
 
 @dataclass
 class SlotState:
     request: Request
-    pages: List[int]
+    pages: List[int]                   # block-table order (shared + fresh)
+    fresh_pages: List[int] = field(default_factory=list)  # refcount-1, ours
+    matched_len: int = 0               # tokens served from the prefix cache
+    shared_count: int = 0              # leading fully-shared pages
+    cow_src: int = -1                  # partial tail page to copy, or -1
     emitted: List[int] = field(default_factory=list)
     submitted_at: float = 0.0          # queued (arrival) time
     admitted_at: float = 0.0
@@ -73,13 +129,19 @@ class ServeMetrics:
     steps: int = 0                   # fused decode micro-steps executed
     slot_steps_active: int = 0       # slot-steps that carried a live request
     slot_steps_total: int = 0
-    prefill_tokens: int = 0          # real prompt tokens prefetched
+    prefill_tokens: int = 0          # prompt tokens actually computed
     prefill_padded: int = 0          # bucket-padded prompt tokens
     generated_tokens: int = 0
     admitted: int = 0
     retired: int = 0
     rejected: int = 0                # could never fit the page pool
     latency_s: List[float] = field(default_factory=list)
+    # -- prefix cache -------------------------------------------------------
+    prefix_hits: int = 0             # admissions with a non-empty match
+    prefix_matched_tokens: int = 0   # prefill tokens saved by sharing
+    pages_shared: int = 0            # zero-copy page mappings
+    cow_copies: int = 0              # partial tail pages copied on write
+    prefix_evicted_pages: int = 0    # trie pages reclaimed under pressure
 
     @property
     def decode_idle_frac(self) -> float:
@@ -93,25 +155,39 @@ class ServeMetrics:
             return 0.0
         return 1.0 - self.prefill_tokens / self.prefill_padded
 
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of prompt tokens served from the prefix cache."""
+        total = self.prefix_matched_tokens + self.prefill_tokens
+        return self.prefix_matched_tokens / total if total else 0.0
+
     def percentile_latency(self, q: float) -> float:
         return float(np.percentile(self.latency_s, q)) if self.latency_s \
             else 0.0
 
 
 class ContinuousScheduler:
-    """FCFS admission control over decode slots + the page pool.
+    """FCFS admission control over decode slots + the refcounted page pool.
 
     The engine drives it:  ``waiting`` holds not-yet-admitted requests
     (arrival-gated when a trace supplies arrival offsets); ``admit``
-    claims a slot + pages, ``retire`` releases them.
+    claims a slot + pages, ``retire`` releases them.  With a
+    ``prefix_cache``, admission first matches the request's longest
+    cached prefix: fully-covered pages are mapped shared (incref, zero
+    prefill cost), a partially-covered tail page is flagged for
+    copy-on-write, and only the fresh remainder is allocated — evicting
+    LRU unreferenced trie leaves if the pool runs dry.
     """
 
     def __init__(self, max_slots: int, allocator: PageAllocator,
-                 page_size: int, max_pages_per_slot: Optional[int] = None):
+                 page_size: int, max_pages_per_slot: Optional[int] = None,
+                 prefix_cache=None, match_prefix: bool = True):
         self.max_slots = max_slots
         self.allocator = allocator
         self.page_size = page_size
         self.max_pages_per_slot = max_pages_per_slot
+        self.prefix_cache = prefix_cache
+        self.match_prefix = match_prefix and prefix_cache is not None
         self.waiting: List[Request] = []
         self.slots: Dict[int, SlotState] = {}      # slot idx -> state
         self._submit_t: Dict[int, float] = {}      # uid -> queued time
@@ -136,31 +212,91 @@ class ContinuousScheduler:
             n = min(n, self.max_pages_per_slot)
         return n
 
+    def _alloc_with_eviction(self, n: int) -> Optional[List[int]]:
+        pages = self.allocator.alloc(n)
+        if pages is None and self.prefix_cache is not None:
+            self.prefix_cache.evict(n - self.allocator.free_count)
+            pages = self.allocator.alloc(n)
+        return pages
+
     # -- admit / retire -----------------------------------------------------
     def try_admit(self, now: float = 0.0) -> Optional[tuple]:
         """Pop the head-of-line request into a free slot if the pool can
         hold it.  Returns (slot_idx, SlotState) or None.  FCFS: a stuck
         head (pool too full) blocks admission — freeing happens via
-        retire, so this can't deadlock while any slot is live."""
+        retire and prefix-cache eviction, so this can't deadlock while
+        any slot is live."""
         if not self.waiting:
             return None
         free = self.free_slots()
         if not free:
             return None
         req = self.waiting[0]
-        pages = self.allocator.alloc(self.pages_needed(req))
-        if pages is None:
+        total = self.pages_needed(req)
+        matched, mpages = (0, [])
+        if self.match_prefix and req.prompt_len > 1:
+            # always leave >= 1 suffix token: its logits seed sampling
+            matched, mpages = self.prefix_cache.match(
+                req.tokens[:req.prompt_len - 1])
+        shared = matched // self.page_size           # fully-covered pages
+        cow_src = mpages[shared] if matched % self.page_size else -1
+        # take references on every matched page BEFORE allocating: the
+        # allocation may evict LRU trie leaves, and a bare trie reference
+        # would make the matched pages themselves eviction candidates
+        for p in mpages[:shared]:
+            self.allocator.incref(p)                 # zero-copy mapping
+        if cow_src >= 0:
+            self.allocator.incref(cow_src)           # pin the COW source
+        fresh = self._alloc_with_eviction(total - shared)
+        if fresh is None:
+            for p in mpages[:shared]:
+                self.allocator.decref(p)
+            if cow_src >= 0:
+                self.allocator.decref(cow_src)
             return None
         self.waiting.pop(0)
         slot = free[0]
-        st = SlotState(request=req, pages=pages, admitted_at=now,
+        st = SlotState(request=req, pages=mpages[:shared] + fresh,
+                       fresh_pages=fresh, matched_len=matched,
+                       shared_count=shared, cow_src=cow_src,
+                       admitted_at=now,
                        submitted_at=self._submit_t.get(req.uid, 0.0))
+        req.prefix_tokens_matched = matched
         self.slots[slot] = st
         return slot, st
+
+    def release_cow_source(self, st: SlotState) -> None:
+        """Drop the pin on the COW source page once the engine has copied
+        it into the request's own tail page."""
+        if st.cow_src >= 0:
+            self.allocator.decref(st.cow_src)
+            st.cow_src = -1
+
+    def insert_prefix(self, st: SlotState, valid_len: int) -> int:
+        """Index ``valid_len`` tokens of the slot's context (prompt, plus
+        generated tokens at retire) into the prefix cache.  The engine
+        calls this (a) right after the admission prefill with the
+        page-aligned prompt span — pages that decode will still write
+        into are excluded — and (b) at retire with the full finalized
+        context."""
+        if self.prefix_cache is None or not self.match_prefix \
+                or valid_len <= 0:
+            return 0
+        toks = list(st.request.tokens) + st.emitted
+        return self.prefix_cache.insert(toks[:valid_len], st.pages,
+                                        valid_len)
 
     def retire(self, slot: int, now: float = 0.0) -> SlotState:
         st = self.slots.pop(slot)
         st.finished_at = now
         st.request.result = st.emitted[:st.request.max_new_tokens]
-        self.allocator.free(st.pages)
+        self.release_cow_source(st)
+        # finalized context -> cache it for future requests.  The last
+        # emitted token's KV may never have been written (a budget-capped
+        # request samples it without a further decode step), so it is
+        # conservatively excluded.
+        cached_gen = max(len(st.emitted) - 1, 0)
+        self.insert_prefix(st, st.request.prompt_len + cached_gen)
+        for p in st.pages:
+            self.allocator.decref(p)
         return st

@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.configs.base import (HYBRID, MLSTM, MOE_FFN, SLSTM, ModelConfig)
 from repro.core import kv_cache as KV
+from repro.core import prefix_cache as PC
 from repro.core import pruning as PR
 from repro.core.continuous import (ContinuousScheduler, PageAllocator,
                                    ServeMetrics)
@@ -69,12 +70,12 @@ class InferenceEngine:
         self.rng = jax.random.PRNGKey(seed)
         self.stats = EngineStats()
         self._donate = donate
-        self._cont_cache = {}          # (sp, steps) -> jitted (admit, step)
+        self._cont_cache = {}          # (sp, steps) -> jitted fns
+        self._paged_ctx = None         # persistent paged pool + radix trie
 
-        def prefill_fn(params, tokens, lengths, cache, start=0):
+        def prefill_fn(params, tokens, lengths, cache):
             return T.forward_prefill(params, cfg, tokens, lengths, cache,
-                                     policy=policy, max_len=max_len,
-                                     start=start)
+                                     policy=policy, max_len=max_len)
 
         def decode_fn(params, tokens, cache, lengths):
             return T.forward_decode(params, cfg, tokens, cache, lengths,
@@ -107,10 +108,7 @@ class InferenceEngine:
             return emitted.T, carry[1]                    # (B, n), cache
 
         dn = (3,) if donate else ()
-        self._prefill = jax.jit(prefill_fn, donate_argnums=dn,
-                                static_argnums=(4,))
-        self._prefix_cache = None
-        self._prefix_len = 0
+        self._prefill = jax.jit(prefill_fn, donate_argnums=dn)
         self._decode = jax.jit(decode_fn,
                                donate_argnums=(2,) if donate else ())
         self._decode_n = jax.jit(decode_n_fn, static_argnums=(4,),
@@ -146,41 +144,94 @@ class InferenceEngine:
         return out
 
     # -- prefix caching (paper §1: "extracted relevant content offline") --
-    def set_prefix(self, prefix_tokens) -> None:
-        """Precompute the KV/state cache of a shared prompt prefix once;
-        every subsequent request reuses it (broadcast across slots)."""
-        toks = jnp.asarray(prefix_tokens, jnp.int32)[None]
-        cache = T.init_cache(self.cfg, 1, self.max_len,
-                             self.policy.compute_dtype)
-        _, cache = self._prefill(self.params, toks,
-                                 jnp.asarray([toks.shape[1]], jnp.int32),
-                                 cache, 0)
-        self._prefix_cache = cache
-        self._prefix_len = int(toks.shape[1])
+    def set_prefix(self, prefix_tokens, *, page_size: int = 16,
+                   num_pages: Optional[int] = None,
+                   slots: Optional[int] = None) -> None:
+        """Prefill a shared prompt prefix into the paged pool ONCE and
+        pin it in the radix prefix cache: every later request admitted by
+        :meth:`serve_continuous` that starts with these tokens maps the
+        prefix pages zero-copy and only prefills its own suffix.
+
+        Only layer families that support page sharing can be seeded (see
+        ``prefix_cache.shareable``); for opted-out families this warns
+        and is a no-op — serving stays correct, just without reuse.  The
+        geometry arguments must match the later ``serve_continuous`` call
+        (they share the persistent pool).
+        """
+        toks = [int(t) for t in prefix_tokens]
+        reason = PC.shareable(self.cfg, self.max_len)
+        if reason is not None:
+            warnings.warn(f"set_prefix: prefix sharing disabled — {reason}")
+            return
+        if len(toks) > self.max_len - 1:
+            raise ValueError(f"prefix of {len(toks)} tokens leaves no room "
+                             f"to generate within max_len={self.max_len}")
+        ctx = self._paged_context(page_size, num_pages, slots)
+        n = -(-len(toks) // page_size)
+        pages = ctx["alloc"].alloc(n)
+        if pages is None:
+            ctx["trie"].evict(n - ctx["alloc"].free_count)
+            pages = ctx["alloc"].alloc(n)
+        if pages is None:
+            raise ValueError(f"prefix needs {n} pages; pool has only "
+                             f"{ctx['alloc'].free_count} free")
+        seed = self._cont_cache.get("seed")
+        if seed is None:
+            cfg, policy, max_len = self.cfg, self.policy, self.max_len
+
+            def seed_fn(params, tokens, length, block_row, pages_a, cache):
+                cache = KV.reset_pages_all(cache, pages_a)
+                view = KV.slot_view(cache, 1)
+                paged = {"block_tables": block_row,
+                         "active": jnp.ones((1,), bool)}
+                _, view = T.forward_prefill(
+                    params, cfg, tokens, length, view, policy=policy,
+                    max_len=max_len, last_only=True, paged=paged)
+                return KV.slot_merge(cache, view,
+                                     jnp.zeros((1,), jnp.int32))
+
+            seed = jax.jit(seed_fn,
+                           donate_argnums=(5,) if self._donate else ())
+            self._cont_cache["seed"] = seed
+        row = np.full((1, ctx["pages_per_slot"]), -1, np.int32)
+        row[0, :n] = pages
+        pages_a = np.full((1, ctx["pages_per_slot"]), ctx["dump"], np.int32)
+        pages_a[0, :n] = pages
+        ctx["cache"] = seed(self.params,
+                            jnp.asarray([toks], jnp.int32),
+                            jnp.asarray([len(toks)], jnp.int32),
+                            jnp.asarray(row), jnp.asarray(pages_a),
+                            ctx["cache"])
+        jax.block_until_ready(ctx["cache"]["layers"])
+        # the trie takes its own reference on retained pages; ours drops
+        ctx["trie"].insert(toks, pages, len(toks), pin=True)
+        for p in pages:
+            ctx["alloc"].decref(p)
 
     def clear_prefix(self) -> None:
-        self._prefix_cache = None
-        self._prefix_len = 0
+        """Unpin all seeded prefixes: their pages stay cached but become
+        ordinary LRU-evictable radix entries."""
+        if self._paged_ctx is not None:
+            self._paged_ctx["trie"].unpin_all()
 
-    def _fresh_cache(self, B):
-        if self._prefix_cache is None:
-            return T.init_cache(self.cfg, B, self.max_len,
-                                self.policy.compute_dtype), 0
-        # broadcast the single-slot prefix cache to B slots
-        cache = jax.tree.map(
-            lambda a: jnp.repeat(a, B, axis=1), self._prefix_cache)
-        return cache, self._prefix_len
+    def reset_prefix_cache(self) -> None:
+        """Drop the persistent paged pool and radix trie entirely (cold
+        cache).  Jitted functions are kept, so the next serve pays no
+        retrace — benchmarks use this to measure cold-trie serving with
+        warm compilation."""
+        self._paged_ctx = None
 
     # -- optimized path (P1) --------------------------------------------
     def _generate_kv(self, tokens, lengths, max_new, sp, stop_at_eos):
         B = tokens.shape[0]
-        cache, start = self._fresh_cache(B)
+        cache = T.init_cache(self.cfg, B, self.max_len,
+                             self.policy.compute_dtype)
         t0 = time.perf_counter()
         toks = jnp.asarray(tokens, jnp.int32)
-        lens = jnp.asarray(lengths, jnp.int32) + start
+        lens = jnp.asarray(lengths, jnp.int32)
         logits, cache = self._prefill(self.params, toks,
                                       jnp.asarray(lengths, jnp.int32),
-                                      cache, start)
+                                      cache)
         logits = jax.block_until_ready(logits)
         t1 = time.perf_counter()
 
@@ -249,6 +300,38 @@ class InferenceEngine:
         return out
 
     # -- continuous batching (paged KV, in-flight admission) --------------
+    def _paged_context(self, page_size: int, num_pages: Optional[int],
+                       slots: Optional[int]) -> dict:
+        """The persistent paged serving context: pool arrays, refcounted
+        allocator, and the radix prefix trie.  It survives across
+        ``serve_continuous`` calls (and is what ``set_prefix`` seeds), so
+        cached prefixes keep paying off run after run.  A geometry change
+        rebuilds it from scratch (dropping any cached prefixes, loudly).
+        """
+        slots = slots or self.max_batch
+        pages_per_slot = -(-self.max_len // page_size)
+        if num_pages is None:
+            num_pages = slots * pages_per_slot
+        key = (page_size, num_pages, slots)
+        if self._paged_ctx is not None and self._paged_ctx["key"] == key:
+            return self._paged_ctx
+        if self._paged_ctx is not None:
+            warnings.warn(
+                f"paged pool geometry changed {self._paged_ctx['key']} -> "
+                f"{key}; rebuilding (cached prefixes are dropped)")
+        alloc = PageAllocator(num_pages)
+        self._paged_ctx = {
+            "key": key, "page_size": page_size, "num_pages": num_pages,
+            "slots": slots, "pages_per_slot": pages_per_slot,
+            "dump": num_pages, "alloc": alloc,
+            "trie": PC.RadixPrefixCache(alloc, page_size),
+            "cache": T.init_paged_cache(
+                self.cfg, num_pages=num_pages, page_size=page_size,
+                max_slots=slots, max_len=self.max_len,
+                dtype=self.policy.compute_dtype),
+        }
+        return self._paged_ctx
+
     def _continuous_fns(self, sp: SamplingParams, steps_per_sync: int):
         """Build (once per (sp, steps) combo) the two jitted entry points
         of the continuous path:
@@ -258,6 +341,11 @@ class InferenceEngine:
           pages (and resets those pages' stale positions), merges dense
           per-slot state into the slot rows, and samples each first
           token — one dispatch per admission group.
+        * admit_prefix: the radix-cache variant — copies each request's
+          partial tail page (copy-on-write; shared pages are never
+          written), prefills only the *unmatched suffix* from its per-row
+          start offset, and attends over the gathered block table so the
+          suffix sees the shared prefix KV it never computed.
         * step: a lax.scan fusing ``steps_per_sync`` iterations of
           [decode all slots -> sample on device -> scatter KV into pages],
           so the sampled path costs one host round-trip per *sync*, not
@@ -279,6 +367,25 @@ class InferenceEngine:
                                              view, policy=policy,
                                              max_len=max_len, last_only=True,
                                              paged=paged)
+            cache = KV.slot_merge(cache, view, slot)
+            rng, sub = jax.random.split(rng)
+            first = sample(logits[:, 0], sub, sp)
+            return first, cache, rng
+
+        def admit_prefix_fn(params, tokens, length, start, slot, block_row,
+                            pages, cow_src, cow_dst, cow_keep, cache, rng):
+            # order matters: reset the fresh pages' stale positions, THEN
+            # copy-on-write the partial tail (the destination is one of
+            # the fresh pages), THEN prefill the suffix into it
+            cache = KV.reset_pages_all(cache, pages)
+            cache = KV.copy_pages_all(cache, cow_src, cow_dst, cow_keep)
+            view = KV.slot_view(cache, tokens.shape[0])
+            paged = {"block_tables": block_row,
+                     "active": jnp.ones((tokens.shape[0],), bool)}
+            logits, view = T.forward_prefill(params, cfg, tokens, length,
+                                             view, policy=policy,
+                                             max_len=max_len, last_only=True,
+                                             start=start, paged=paged)
             cache = KV.slot_merge(cache, view, slot)
             rng, sub = jax.random.split(rng)
             first = sample(logits[:, 0], sub, sp)
@@ -308,9 +415,12 @@ class InferenceEngine:
             tok, lens, rem, act, cache, rng = carry
             return tok, lens, rem, act, cache, rng, emits.T, acts.T
 
-        dn6 = (6,) if self._donate else ()
-        fns = (jax.jit(admit_fn, donate_argnums=dn6),
-               jax.jit(step_fn, donate_argnums=dn6))
+        fns = (jax.jit(admit_fn,
+                       donate_argnums=(6,) if self._donate else ()),
+               jax.jit(admit_prefix_fn,
+                       donate_argnums=(10,) if self._donate else ()),
+               jax.jit(step_fn,
+                       donate_argnums=(6,) if self._donate else ()))
         self._cont_cache[key] = fns
         return fns
 
@@ -320,15 +430,24 @@ class InferenceEngine:
                          num_pages: Optional[int] = None,
                          slots: Optional[int] = None,
                          steps_per_sync: int = 4,
-                         arrivals: Optional[List[float]] = None):
+                         arrivals: Optional[List[float]] = None,
+                         prefix_cache: Optional[bool] = None):
         """Serve requests with continuous batching over a paged KV cache.
 
         Unlike :meth:`serve` (sort -> bucket -> drain), decode slots are
         persistent: a request is admitted into a free slot the moment one
         exists (and the page pool can hold its worst-case context), and
         is retired at EOS — other slots never wait for it.  KV lives in
-        ``num_pages`` shared pages; per-request pages are allocated at
-        admission and freed at retirement.
+        ``num_pages`` refcounted shared pages; per-request pages are
+        allocated at admission and released at retirement.
+
+        prefix_cache: share identical prompt-prefix pages across requests
+        through a radix trie (copy-on-write; zero prefill cost for the
+        matched span).  None (default) enables it whenever every layer
+        family supports sharing (see ``prefix_cache.shareable``); True
+        warns and falls back to unshared serving for opted-out families;
+        False disables matching (the pool still evicts stale cached
+        prefixes under pressure).  Results are exact either way.
 
         arrivals: optional per-request arrival offsets in seconds (same
         order as ``requests``) for open-loop traces; requests only become
@@ -339,11 +458,19 @@ class InferenceEngine:
         """
         if arrivals is not None and len(arrivals) != len(requests):
             raise ValueError("arrivals must match requests 1:1")
-        slots = slots or self.max_batch
-        pages_per_slot = -(-self.max_len // page_size)
-        if num_pages is None:
-            num_pages = slots * pages_per_slot
-        admit_fn, step_fn = self._continuous_fns(sp, steps_per_sync)
+        ctx = self._paged_context(page_size, num_pages, slots)
+        slots, num_pages = ctx["slots"], ctx["num_pages"]
+        pages_per_slot, dump = ctx["pages_per_slot"], ctx["dump"]
+        trie = ctx["trie"]
+        share_reason = PC.shareable(self.cfg, self.max_len)
+        share = share_reason is None if prefix_cache is None \
+            else bool(prefix_cache)
+        if share and share_reason is not None:
+            warnings.warn(f"prefix_cache requested but disabled — "
+                          f"{share_reason}")
+            share = False
+        admit_fn, admit_prefix_fn, step_fn = \
+            self._continuous_fns(sp, steps_per_sync)
         buckets = self.prompt_buckets()
         # Two layer families are sensitive to prompt padding (the dense
         # bucket path shares both limitations for ragged batches):
@@ -355,16 +482,13 @@ class InferenceEngine:
             spec.mixer in (MLSTM, SLSTM, HYBRID) or spec.ffn == MOE_FFN
             for stack in self.cfg.stacks for spec in stack.pattern)
 
-        cache = T.init_paged_cache(
-            self.cfg, num_pages=num_pages, page_size=page_size,
-            max_slots=slots, max_len=self.max_len,
-            dtype=self.policy.compute_dtype)
-        dump = num_pages                                  # pool page P-1
-        sched = ContinuousScheduler(slots, PageAllocator(num_pages),
-                                    page_size,
-                                    max_pages_per_slot=pages_per_slot)
+        cache = ctx["cache"]
+        sched = ContinuousScheduler(slots, ctx["alloc"], page_size,
+                                    max_pages_per_slot=pages_per_slot,
+                                    prefix_cache=trie, match_prefix=share)
         metrics = ServeMetrics()
         stats = EngineStats(batches=1)
+        trie_base = trie.evicted_pages
 
         block_tables = np.full((slots, pages_per_slot), -1, np.int32)
         tok = np.zeros((slots,), np.int32)
@@ -429,33 +553,66 @@ class InferenceEngine:
                 bucket = chunk[0][2]
                 B = len(chunk)
                 toks = np.zeros((B, bucket), np.int32)
-                plens = np.zeros((B,), np.int32)
+                plens = np.zeros((B,), np.int32)     # computed suffix lens
+                starts = np.zeros((B,), np.int32)    # = matched prefix lens
                 slots_arr = np.zeros((B,), np.int32)
                 rows = np.zeros((B, pages_per_slot), np.int32)
                 pages_arr = np.full((B, pages_per_slot), dump, np.int32)
+                cow_src = np.full((B,), dump, np.int32)
+                cow_dst = np.full((B,), dump, np.int32)
+                cow_keep = np.zeros((B,), np.int32)
                 for i, (slot, st, _) in enumerate(chunk):
                     req = st.request
-                    plens[i] = req.prompt_len
-                    toks[i, :req.prompt_len] = req.tokens
+                    m = st.matched_len
+                    plens[i] = req.prompt_len - m
+                    starts[i] = m
+                    toks[i, :req.prompt_len - m] = req.tokens[m:]
                     slots_arr[i] = slot
                     block_tables[slot, :] = -1
                     block_tables[slot, :len(st.pages)] = st.pages
                     rows[i] = block_tables[slot]
-                    pages_arr[i, :len(st.pages)] = st.pages
+                    # only the request's OWN pages are reset: shared prefix
+                    # pages are live for other readers and the trie
+                    pages_arr[i, :len(st.fresh_pages)] = st.fresh_pages
+                    if st.cow_src >= 0:
+                        # COW invariant: the destination must be private
+                        if sched.allocator.refcount(st.fresh_pages[0]) != 1:
+                            raise AssertionError(
+                                "COW write target is a shared page")
+                        cow_src[i] = st.cow_src
+                        cow_dst[i] = st.fresh_pages[0]
+                        cow_keep[i] = m
+                        metrics.cow_copies += 1
                 tp0 = time.perf_counter()
-                first, cache, rng = admit_fn(
-                    self.params, jnp.asarray(toks), jnp.asarray(plens),
-                    jnp.asarray(slots_arr), jnp.asarray(rows),
-                    jnp.asarray(pages_arr), cache, rng)
+                if share:
+                    first, cache, rng = admit_prefix_fn(
+                        self.params, jnp.asarray(toks), jnp.asarray(plens),
+                        jnp.asarray(starts), jnp.asarray(slots_arr),
+                        jnp.asarray(rows), jnp.asarray(pages_arr),
+                        jnp.asarray(cow_src), jnp.asarray(cow_dst),
+                        jnp.asarray(cow_keep), cache, rng)
+                else:
+                    first, cache, rng = admit_fn(
+                        self.params, jnp.asarray(toks), jnp.asarray(plens),
+                        jnp.asarray(slots_arr), jnp.asarray(rows),
+                        jnp.asarray(pages_arr), cache, rng)
                 first = np.asarray(jax.block_until_ready(first))
                 stats.prefill_s += time.perf_counter() - tp0
                 for i, (slot, st, _) in enumerate(chunk):
                     req = st.request
                     plen = req.prompt_len
+                    sched.release_cow_source(st)
                     stats.prompt_tokens += plen
                     metrics.admitted += 1
-                    metrics.prefill_tokens += plen
+                    metrics.prefill_tokens += plen - st.matched_len
                     metrics.prefill_padded += bucket
+                    metrics.prefix_hits += st.matched_len > 0
+                    metrics.prefix_matched_tokens += st.matched_len
+                    metrics.pages_shared += st.shared_count
+                    # newly produced page-aligned prompt KV joins the trie
+                    # now (the partial tail joins at retire, once decode
+                    # can no longer write into it)
+                    sched.insert_prefix(st, (plen // page_size) * page_size)
                     budget = min(req.max_new_tokens, self.max_len - plen)
                     if first[i] != EOS and budget > 0:
                         st.emitted.append(int(first[i]))
@@ -475,9 +632,10 @@ class InferenceEngine:
                         break
                     progress = True
                     slot, st = adm
-                    plen = st.request.prompt_len
-                    bucket = plen if pad_sensitive \
-                        else pick_bucket(plen, buckets)
+                    # only the unmatched suffix is computed; bucket on it
+                    suffix = st.request.prompt_len - st.matched_len
+                    bucket = suffix if pad_sensitive \
+                        else pick_bucket(suffix, buckets)
                     if pending_adm and pending_adm[0][2] != bucket:
                         flush_admissions()
                     pending_adm.append((slot, st, bucket))
@@ -487,13 +645,16 @@ class InferenceEngine:
 
             if not sched.slots:
                 if sched.waiting:
-                    # head request can never fit (pool fully free, still
-                    # too small): fail it loudly rather than spin forever
+                    # head request can never fit (no slot is live and
+                    # eviction already reclaimed every unpinned cached
+                    # page): fail it loudly rather than spin forever
                     req = sched.waiting.pop(0)
                     warnings.warn(
                         f"request {req.uid}: needs "
                         f"{sched.pages_needed(req)} pages but the pool "
-                        f"holds {sched.allocator.num_pages}; rejecting")
+                        f"holds {sched.allocator.num_pages} "
+                        f"({sched.allocator.free_count} free after "
+                        f"eviction); rejecting")
                     req.result = []
                     metrics.rejected += 1
                     continue
@@ -526,6 +687,8 @@ class InferenceEngine:
             act = act_new
 
         self.rng = rng
+        ctx["cache"] = cache           # pool persists across serve calls
+        metrics.prefix_evicted_pages = trie.evicted_pages - trie_base
         if self.prune_maps is not None:
             for r in requests:
                 if r.result:
@@ -533,6 +696,16 @@ class InferenceEngine:
                         np.asarray([r.result]), self.prune_maps)[0]]
         stats.generated_tokens = metrics.generated_tokens
         self.stats.merge(stats)
+        # pool accounting must balance: every page is free or cached, and
+        # nothing a retired request held leaked (alloc == free + resident)
+        sched.allocator.check()
+        resident = trie.resident_pages
+        if sorted(set(resident)) != sorted(
+                p for p in range(num_pages)
+                if sched.allocator.refcount(p) > 0) \
+                or any(sched.allocator.refcount(p) != 1 for p in resident):
+            raise AssertionError("page leak: allocated pages != pages "
+                                 "resident in the prefix cache")
         return requests, metrics
 
     # -- request-level API (P4 dynamic batching) -------------------------

@@ -280,6 +280,43 @@ def paged_gather(cache: dict, block_tables):
             kp.reshape(B, npg * page))
 
 
+def copy_pages(cache, src, dst, keep_below) -> dict:
+    """Copy-on-write clone: page ``dst[i]`` becomes a copy of ``src[i]``
+    with only the entries at absolute positions ``0 <= pos <
+    keep_below[i]`` kept valid (the rest are masked to pos = -1).
+
+    This is how a request whose prefix match ends *inside* a page gets a
+    private tail page: the shared source page is read, never written,
+    and the writer's suffix prefill / decode lands in the copy.  Rows
+    may be padded with src = dst = dump, keep_below = 0 (the dump page's
+    positions are forced to -1, which is their invariant anyway).
+    """
+    if "ppos" not in cache:
+        return cache
+    out = dict(cache)
+    if cache["ppos"].ndim == 3:          # leading scan-repeats dim
+        pos = cache["ppos"][:, src]                      # (R, N, page)
+        keep = (pos >= 0) & (pos < keep_below[None, :, None])
+        out["ppos"] = cache["ppos"].at[:, dst].set(
+            jnp.where(keep, pos, -1))
+        out["pk"] = cache["pk"].at[:, dst].set(cache["pk"][:, src])
+        out["pv"] = cache["pv"].at[:, dst].set(cache["pv"][:, src])
+    else:
+        pos = cache["ppos"][src]                         # (N, page)
+        keep = (pos >= 0) & (pos < keep_below[:, None])
+        out["ppos"] = cache["ppos"].at[dst].set(jnp.where(keep, pos, -1))
+        out["pk"] = cache["pk"].at[dst].set(cache["pk"][src])
+        out["pv"] = cache["pv"].at[dst].set(cache["pv"][src])
+    return out
+
+
+def copy_pages_all(cache: dict, src, dst, keep_below) -> dict:
+    """:func:`copy_pages` over every paged layer of a full model cache."""
+    return {"layers": tuple(
+        tuple(copy_pages(c, src, dst, keep_below) for c in stack_c)
+        for stack_c in cache["layers"])}
+
+
 def reset_pages_all(cache: dict, pages) -> dict:
     """:func:`reset_pages` over every layer of a full model cache."""
     return {"layers": tuple(tuple(reset_pages(c, pages) for c in stack_c)

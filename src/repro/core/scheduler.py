@@ -44,6 +44,9 @@ class Request:
     tokens: List[int]                  # prompt token ids
     max_new_tokens: int = 32
     result: Optional[List[int]] = None # filled by the engine
+    # prompt tokens served zero-copy from the radix prefix cache (set at
+    # continuous admission; 0 on the bucket path / when sharing is off)
+    prefix_tokens_matched: int = 0
 
     @property
     def prompt_len(self) -> int:

@@ -41,6 +41,15 @@ def main():
                          "instead of bucket batches")
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--steps-per-sync", type=int, default=4)
+    ap.add_argument("--prefix-cache", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="radix prefix cache on the continuous path: "
+                         "share identical prompt-prefix KV pages across "
+                         "requests (auto = on when every layer family "
+                         "supports sharing)")
+    ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
+                    help="prepend one shared N-token system prompt to "
+                         "every request (demonstrates the prefix cache)")
     ap.add_argument("--prune-coverage", type=float, default=None,
                     help="e.g. 0.999 -> prune vocab to that corpus coverage")
     ap.add_argument("--temperature", type=float, default=0.0)
@@ -74,13 +83,16 @@ def main():
 
     if args.continuous:
         from repro.core.scheduler import Request
-        reqs = [Request(uid=i, tokens=tok.encode(t),
+        shared = tok.encode(" ".join(synthetic_corpus(
+            3, seed=11)))[:args.shared_prefix] if args.shared_prefix else []
+        reqs = [Request(uid=i, tokens=shared + tok.encode(t),
                         max_new_tokens=args.max_new_tokens)
                 for i, t in enumerate(texts)]
+        prefix = {"auto": None, "on": True, "off": False}[args.prefix_cache]
         t0 = time.time()
         done, metrics = engine.serve_continuous(
             reqs, sp, page_size=args.page_size,
-            steps_per_sync=args.steps_per_sync)
+            steps_per_sync=args.steps_per_sync, prefix_cache=prefix)
         dt = time.time() - t0
         for r in done[:3]:
             print(f"[{r.uid}] {tok.decode(r.result or [])[:70]!r}")
@@ -92,6 +104,10 @@ def main():
             "p99_latency_s": round(metrics.percentile_latency(99), 3),
             "decode_idle_frac": round(metrics.decode_idle_frac, 3),
             "prefill_pad_frac": round(metrics.prefill_pad_frac, 3),
+            "prefix_hit_rate": round(metrics.prefix_hit_rate, 3),
+            "prefix_matched_tokens": metrics.prefix_matched_tokens,
+            "pages_shared": metrics.pages_shared,
+            "cow_copies": metrics.cow_copies,
             "mode": "continuous-paged"}))
         return
 

@@ -165,9 +165,6 @@ def layer_apply(cfg: ModelConfig, spec: LayerSpec, p, x, *, positions,
         q, k, v = L.attn_qkv(cfg, p["attn"], h, positions, theta=theta)
         scale = L.attn_scale(cfg)
         if is_paged:
-            if attend_cache:
-                raise NotImplementedError(
-                    "prefix caching is not supported on the paged path")
             bt = paged["block_tables"]
             pool = {n: cache[n] for n in KV.PAGED_KEYS}
             ring = KV.paged_ring_len(window, pool["ppos"].shape[1],
@@ -179,6 +176,21 @@ def layer_apply(cfg: ModelConfig, spec: LayerSpec, p, x, *, positions,
                 ctx = L.mha_attention_paged(
                     q, c_attn, bt, positions, window=window, scale=scale,
                     attn_softcap=cfg.attn_softcap)
+            elif attend_cache:
+                # prefix-cached admission: the prompt's suffix is written
+                # into this request's own pages first, then queries attend
+                # the *gathered* block table — shared prefix pages (mapped
+                # zero-copy by the radix cache) and the fresh suffix alike.
+                # Only windowless full attention reaches here (ring layers
+                # opt out of sharing: their pages are overwritten in
+                # place, see prefix_cache.shareable).
+                c_attn = KV.paged_write_prefill(
+                    pool, {"k": k, "v": v}, cache_pos, bt, ring_len=ring)
+                kk, vv, kp = KV.paged_gather(c_attn, bt)
+                ctx = L.mha_attention(q, kk.astype(x.dtype),
+                                      vv.astype(x.dtype), positions, kp,
+                                      window=window, scale=scale,
+                                      attn_softcap=cfg.attn_softcap)
             else:                                   # admission prefill
                 ctx = L.mha_attention(q, k, v, positions, positions,
                                       window=window, scale=scale,
@@ -418,7 +430,9 @@ def forward_prefill(params, cfg: ModelConfig, tokens, prompt_lengths, cache,
     prompt_lengths: (B,) valid token count per row *including* prefix
     embeddings but *excluding* ``start``.  ``start`` > 0 continues from a
     pre-filled cache (prefix caching: the paper's "extract content
-    offline" applied to a shared prompt's KV).  Returns
+    offline" applied to a shared prompt's KV); it may be a static int or
+    a per-row (B,) array (paged admission, where each request resumes
+    from its own matched prefix length).  Returns
     (logits (B,S,V), cache) — or (B,1,V) when ``last_only`` (production
     serving: unembed only the sampled position, which for a 262k vocab
     saves terabytes of logits at 32k prefill).
@@ -427,13 +441,15 @@ def forward_prefill(params, cfg: ModelConfig, tokens, prompt_lengths, cache,
     S = tokens.shape[1] + (prefix_embeds.shape[1] if prefix_embeds is not None
                            else 0)
     max_len = max_len or _cache_max_len(cfg, cache)
+    attend = not (isinstance(start, int) and start == 0)
+    start = jnp.asarray(start, jnp.int32).reshape(-1, 1)    # (1,1) or (B,1)
     positions = start + jnp.broadcast_to(jnp.arange(S)[None], (B, S))
     cache_pos = jnp.where(positions < start + prompt_lengths[:, None],
                           positions, -1)
     x = _embed(cfg, params, tokens, prefix_embeds, positions, policy)
     x, cache, _ = _run_all(cfg, params, x, positions=positions,
                            cache_pos=cache_pos, cache=cache, mode="prefill",
-                           max_len=max_len, attend_cache=start > 0,
+                           max_len=max_len, attend_cache=attend,
                            paged=paged)
     if last_only:
         x = jnp.take_along_axis(
