@@ -17,6 +17,11 @@ Two trace shapes:
   * shared: N requests over --prefix-groups distinct system prompts —
             the multi-tenant workload prefix caching targets
 
+``--kv-sweep`` additionally serves the same trace at kv_dtype bf16 and
+int8 under an equal-bytes pool budget (int8 gets 2x the pages) and
+records tokens/s, p50/p99, admission stalls and prefix evictions per
+leg, plus greedy-output parity against a full-precision reference.
+
 Results are also written as machine-readable JSON (--out, default
 ``BENCH_serving.json``) so the perf trajectory is tracked across PRs.
 
@@ -166,6 +171,67 @@ def run_continuous(engine: InferenceEngine, reqs, sp, *, page_size,
         "pages_shared": m.pages_shared,
         "cow_copies": m.cow_copies,
         "prefix_evicted_pages": m.prefix_evicted_pages,
+        "kv_dtype": m.kv_dtype,
+        "kv_pool_bytes": m.kv_pool_bytes,
+        "kv_bytes_per_token": round(m.kv_bytes_per_token, 1),
+        "peak_pages_in_use": m.peak_pages_in_use,
+        "admission_stalls": m.admission_stalls,
+        "rejected": m.rejected,
+    }
+
+
+def run_kv_sweep(args, cfg, params, base_policy, trace, sp, arrivals):
+    """Same trace at kv_dtype bf16 vs int8 under an *equal-bytes* pool
+    budget: bf16 gets ``budget`` pages, int8 gets 2x (half the bytes per
+    K/V element; the small per-entry scale overhead is visible in the
+    recorded kv_pool_bytes).  More pages means more concurrent slots and
+    fewer prefix evictions, which is where the int8 throughput win comes
+    from.  A full-precision (kv auto) leg provides the greedy-output
+    reference."""
+    import dataclasses
+    slots = args.max_batch
+    pages_per_slot = -(-args.max_len // args.page_size)
+    # headroom above one slot's worth: a head-of-line request may need
+    # the full pages_per_slot while its COW source page is pinned, and a
+    # rejected request would make the output-parity comparison unfair
+    budget = args.kv_budget_pages or max(pages_per_slot + 2,
+                                         (slots * pages_per_slot) // 2)
+    legs, outs = {}, {}
+    for name, kv, pages in (("fp", "auto", budget),
+                            ("bf16", "bf16", budget),
+                            ("int8", "int8", 2 * budget)):
+        pol = dataclasses.replace(base_policy, kv_dtype=kv)
+        eng = InferenceEngine(cfg, params, policy=pol, max_batch=slots,
+                              max_len=args.max_len)
+        run_continuous(eng, copy.deepcopy(trace), sp,       # warm compile
+                       page_size=args.page_size, num_pages=pages,
+                       steps_per_sync=args.steps_per_sync,
+                       prefix_cache=True)
+        eng.reset_prefix_cache()                            # cold trie
+        reqs = copy.deepcopy(trace)
+        legs[name] = run_continuous(eng, reqs, sp,
+                                    page_size=args.page_size,
+                                    num_pages=pages,
+                                    steps_per_sync=args.steps_per_sync,
+                                    arrivals=arrivals, prefix_cache=True)
+        legs[name]["num_pages"] = pages
+        outs[name] = [r.result for r in reqs]
+    speedup = (legs["int8"]["tokens_per_s"] / legs["bf16"]["tokens_per_s"]
+               if legs["bf16"]["tokens_per_s"] else float("nan"))
+    n = len(outs["fp"]) or 1
+    return {
+        "equal_bytes_budget_pages_bf16": budget,
+        "fp_reference": legs["fp"],
+        "bf16": legs["bf16"],
+        "int8": legs["int8"],
+        "int8_speedup_tokens_per_s": round(speedup, 3),
+        "int8_outputs_match_fp": outs["int8"] == outs["fp"],
+        # per-request greedy agreement with full precision — int8 KV
+        # perturbs logits by ~absmax/254 per element, so requests whose
+        # greedy margin sits below that can flip (see README precision)
+        "int8_greedy_match_frac": round(sum(
+            a == b for a, b in zip(outs["int8"], outs["fp"])) / n, 3),
+        "int8_outputs_match_bf16": outs["int8"] == outs["bf16"],
     }
 
 
@@ -185,6 +251,16 @@ def main():
     ap.add_argument("--steps-per-sync", type=int, default=8)
     ap.add_argument("--policy", default="fp32",
                     choices=["fp32", "bf16", "fp16"])
+    ap.add_argument("--kv-dtype", default="auto",
+                    choices=["auto", "bf16", "fp16", "int8"],
+                    help="KV-pool storage dtype for the main runs")
+    ap.add_argument("--kv-sweep", action="store_true",
+                    help="also run the same trace at kv bf16 vs int8 "
+                         "under an equal-bytes pool budget (int8 gets 2x "
+                         "pages) and record the comparison")
+    ap.add_argument("--kv-budget-pages", type=int, default=None,
+                    help="bf16 page budget for --kv-sweep (int8 gets 2x); "
+                         "default: half the slots' worth of pages")
     ap.add_argument("--poisson", type=float, default=None,
                     help="arrival rate (req/s) for an open-loop trace; "
                          "default: all requests arrive at t=0")
@@ -201,6 +277,9 @@ def main():
 
     cfg = get_reduced(args.arch)
     policy = get_policy(args.policy)
+    if args.kv_dtype != "auto":
+        import dataclasses
+        policy = dataclasses.replace(policy, kv_dtype=args.kv_dtype)
     from repro.models import transformer as T
     params = T.init_params(jax.random.PRNGKey(0), cfg, policy)
     sp = SamplingParams()                                 # greedy
@@ -273,6 +352,9 @@ def main():
         - pfx["prefill_tokens"],
         "outputs_identical_prefix_on_off": identical,
     }
+    if args.kv_sweep:
+        report["kv_sweep"] = run_kv_sweep(args, cfg, params, policy,
+                                          trace, sp, arrivals)
     print(json.dumps(report, indent=2))
     if args.out:
         with open(args.out, "w") as f:

@@ -142,6 +142,12 @@ class ServeMetrics:
     pages_shared: int = 0            # zero-copy page mappings
     cow_copies: int = 0              # partial tail pages copied on write
     prefix_evicted_pages: int = 0    # trie pages reclaimed under pressure
+    # -- KV pool capacity (kv_dtype axis) -----------------------------------
+    kv_dtype: str = "auto"           # pool storage mode this run served at
+    kv_pool_bytes: int = 0           # total paged-pool bytes (incl. scales)
+    kv_bytes_per_token: float = 0.0  # pool bytes / token of capacity
+    peak_pages_in_use: int = 0       # high-water mark of allocated pages
+    admission_stalls: int = 0        # syncs a free slot waited on the pool
 
     @property
     def decode_idle_frac(self) -> float:
@@ -151,6 +157,7 @@ class ServeMetrics:
 
     @property
     def prefill_pad_frac(self) -> float:
+        # zero-token traces (no admissions / empty prompts) report 0 waste
         if not self.prefill_padded:
             return 0.0
         return 1.0 - self.prefill_tokens / self.prefill_padded

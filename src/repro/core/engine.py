@@ -20,7 +20,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import (HYBRID, MLSTM, MOE_FFN, SLSTM, ModelConfig)
+from repro.configs.base import (ATTN, HYBRID, MLSTM, MOE_FFN, SLSTM,
+                                ModelConfig)
 from repro.core import kv_cache as KV
 from repro.core import prefix_cache as PC
 from repro.core import pruning as PR
@@ -225,7 +226,7 @@ class InferenceEngine:
     def _generate_kv(self, tokens, lengths, max_new, sp, stop_at_eos):
         B = tokens.shape[0]
         cache = T.init_cache(self.cfg, B, self.max_len,
-                             self.policy.compute_dtype)
+                             self.policy.kv_cache_dtype(dense=True))
         t0 = time.perf_counter()
         toks = jnp.asarray(tokens, jnp.int32)
         lens = jnp.asarray(lengths, jnp.int32)
@@ -307,6 +308,10 @@ class InferenceEngine:
         ``serve_continuous`` calls (and is what ``set_prefix`` seeds), so
         cached prefixes keep paying off run after run.  A geometry change
         rebuilds it from scratch (dropping any cached prefixes, loudly).
+
+        Pool storage follows ``policy.kv_dtype``: int8 halves K/V bytes
+        per token (pool sizing below accounts for the parallel scale
+        pools), so the same byte budget holds ~2x the pages.
         """
         slots = slots or self.max_batch
         pages_per_slot = -(-self.max_len // page_size)
@@ -319,16 +324,30 @@ class InferenceEngine:
             warnings.warn(
                 f"paged pool geometry changed {self._paged_ctx['key']} -> "
                 f"{key}; rebuilding (cached prefixes are dropped)")
+        kv_dtype = self.policy.kv_dtype
+        if kv_dtype == "int8" and not any(
+                spec.mixer == ATTN
+                for stack in self.cfg.stacks for spec in stack.pattern):
+            warnings.warn("kv_dtype=int8 requested but no attention layer "
+                          "has a paged pool to quantize; state stays at "
+                          "full precision")
         alloc = PageAllocator(num_pages)
+        cache = T.init_paged_cache(
+            self.cfg, num_pages=num_pages, page_size=page_size,
+            max_slots=slots, max_len=self.max_len,
+            dtype=self.policy.compute_dtype, kv_dtype=kv_dtype)
+        pool_bytes = KV.paged_pool_bytes(cache)
         self._paged_ctx = {
             "key": key, "page_size": page_size, "num_pages": num_pages,
             "slots": slots, "pages_per_slot": pages_per_slot,
             "dump": num_pages, "alloc": alloc,
+            "kv_dtype": kv_dtype,
+            "kv_pool_bytes": pool_bytes,
+            # per token of pool capacity (incl. the dump page), summed
+            # over layers — scale pools and position bookkeeping included
+            "kv_bytes_per_token": pool_bytes / ((num_pages + 1) * page_size),
             "trie": PC.RadixPrefixCache(alloc, page_size),
-            "cache": T.init_paged_cache(
-                self.cfg, num_pages=num_pages, page_size=page_size,
-                max_slots=slots, max_len=self.max_len,
-                dtype=self.policy.compute_dtype),
+            "cache": cache,
         }
         return self._paged_ctx
 
@@ -486,7 +505,9 @@ class InferenceEngine:
         sched = ContinuousScheduler(slots, ctx["alloc"], page_size,
                                     max_pages_per_slot=pages_per_slot,
                                     prefix_cache=trie, match_prefix=share)
-        metrics = ServeMetrics()
+        metrics = ServeMetrics(kv_dtype=ctx["kv_dtype"],
+                               kv_pool_bytes=ctx["kv_pool_bytes"],
+                               kv_bytes_per_token=ctx["kv_bytes_per_token"])
         stats = EngineStats(batches=1)
         trie_base = trie.evicted_pages
 
@@ -640,8 +661,16 @@ class InferenceEngine:
                         flush_admissions()
                     pending_adm.append((slot, st, bucket))
                 flush_admissions()
+                metrics.peak_pages_in_use = max(
+                    metrics.peak_pages_in_use,
+                    sched.allocator.allocated_count)
                 if not progress or not sched.waiting:
                     break
+
+            if sched.waiting and sched.free_slots() and sched.slots:
+                # a slot sits idle because the pool can't hold the head
+                # request's pages — the capacity ceiling int8 KV raises
+                metrics.admission_stalls += 1
 
             if not sched.slots:
                 if sched.waiting:

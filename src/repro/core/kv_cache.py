@@ -168,23 +168,115 @@ def cache_mask(cache_pos, q_pos, window: Optional[int]):
 # a logical ring of ceil((window+1)/page) pages — the same physical pages
 # are cyclically overwritten, and the stored absolute positions keep the
 # attention mask exact (same trick as the dense ring cache above).
+#
+# Quantized storage mode (Policy.kv_dtype == "int8"): pk/pv hold int8 codes
+# and two parallel *scale pools* hold per-entry, per-kv-head fp32 absmax
+# scales:
+#
+#   pk_scale / pv_scale : (P, page, H_kv)
+#
+# Each written token row (H_kv, D) is quantized independently —
+# q = round(x / s), s = absmax(x)/127 — so scatter writes stay
+# read-modify-write-free and a token's stored code depends only on its own
+# K/V values.  That per-entry determinism is what keeps shared-prefix
+# serving bit-identical to unshared serving on a quantized pool: the same
+# token row quantizes to the same bytes no matter which request wrote it.
+# Scales travel with their pages through COW copies, trie mappings and
+# eviction exactly like pk/pv.
 
-PAGED_KEYS = ("pk", "pv", "ppos")
+PAGED_KEYS = ("pk", "pv", "ppos", "pk_scale", "pv_scale")
+PAGED_DATA_KEYS = ("pk", "pv", "pk_scale", "pv_scale")
+
+INT8_QMAX = 127.0
+
+
+def quantize_kv(x):
+    """Quantize K/V rows to int8 with per-entry, per-head absmax scales.
+
+    x: (..., H, D) float -> (int8 codes (..., H, D), fp32 scales (..., H)).
+    All-zero rows get scale 0 (codes 0 -> dequantize to exact 0).
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = amax / INT8_QMAX
+    q = jnp.round(xf / jnp.maximum(scale, 1e-30)[..., None])
+    q = jnp.clip(q, -INT8_QMAX, INT8_QMAX).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q, scale, dtype=jnp.float32):
+    """Inverse of :func:`quantize_kv` (up to rounding)."""
+    return (q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)) \
+        .astype(dtype)
+
+
+def _scatter_kv(cache: dict, out: dict, val, phys, off) -> None:
+    """Scatter new K/V rows into ``out``'s pools at (phys, off) —
+    quantizing (codes + scale rows) when the pool is int8, casting to
+    the pool dtype otherwise.  ``val``: {"k"/"v": (..., H, D)} rows
+    aligned with phys/off.  Shared by the prefill-chunk and
+    decode-single-token writes so the two paths can never desynchronize
+    their quantized layout."""
+    quant = "pk_scale" in cache
+    for key, pool_key in (("k", "pk"), ("v", "pv")):
+        if quant:
+            q, sc = quantize_kv(val[key])
+            out[pool_key] = cache[pool_key].at[phys, off].set(q)
+            out[pool_key + "_scale"] = \
+                cache[pool_key + "_scale"].at[phys, off].set(sc)
+        else:
+            out[pool_key] = cache[pool_key].at[phys, off].set(
+                val[key].astype(cache[pool_key].dtype))
+
+
+def paged_pool_bytes(cache: dict) -> int:
+    """Total bytes of every paged-pool leaf (K/V pages + scale pools +
+    positions) across a full model cache — the number pool sizing and
+    the serving metrics report."""
+    total = 0
+    for stack_c in cache["layers"]:
+        for c in stack_c:
+            if isinstance(c, dict):
+                for key in PAGED_KEYS:
+                    if key in c:
+                        a = c[key]
+                        total += a.size * a.dtype.itemsize
+    return total
 
 
 def paged_layer_cache_shape(cfg: ModelConfig, spec: LayerSpec,
                             num_pages: int, page_size: int, max_slots: int,
-                            max_len: int, dtype) -> dict:
+                            max_len: int, dtype,
+                            kv_dtype: str = "auto") -> dict:
     """Paged cache for one layer.  ATTN / HYBRID attention K/V become page
     pools; MLA and recurrent families keep their dense per-slot state (the
-    slot API — admit/retire — is identical for them)."""
+    slot API — admit/retire — is identical for them).
+
+    kv_dtype selects pool storage: "auto" stores at ``dtype``; "bf16" /
+    "fp16" override the pool dtype; "int8" stores quantized codes plus
+    per-entry scale pools — for pure attention layers only.  Hybrid
+    layers keep full-precision pools (their SSM/conv state is dense fp32
+    anyway), the same families that opt out of prefix sharing.
+    """
+    from repro.core.precision import kv_store_dtype
     hd = cfg.resolved_head_dim
+    quant = kv_dtype == "int8" and spec.mixer == ATTN
+    pool_dtype = (jnp.int8 if quant
+                  else kv_store_dtype(kv_dtype, dtype, allow_int8=False))
 
     def pool():
         P = num_pages + 1                               # +1 dump page
-        return {"pk": jnp.zeros((P, page_size, cfg.num_kv_heads, hd), dtype),
-                "pv": jnp.zeros((P, page_size, cfg.num_kv_heads, hd), dtype),
-                "ppos": jnp.full((P, page_size), -1, jnp.int32)}
+        out = {"pk": jnp.zeros((P, page_size, cfg.num_kv_heads, hd),
+                               pool_dtype),
+               "pv": jnp.zeros((P, page_size, cfg.num_kv_heads, hd),
+                               pool_dtype),
+               "ppos": jnp.full((P, page_size), -1, jnp.int32)}
+        if quant:
+            out["pk_scale"] = jnp.zeros(
+                (P, page_size, cfg.num_kv_heads), jnp.float32)
+            out["pv_scale"] = jnp.zeros(
+                (P, page_size, cfg.num_kv_heads), jnp.float32)
+        return out
 
     if spec.mixer == ATTN:
         return pool()
@@ -233,9 +325,9 @@ def paged_write_prefill(cache: dict, new: dict, cache_pos, block_tables, *,
     phys = jnp.take_along_axis(block_tables, lp, axis=1)       # (B, take)
     ok = (pos_w >= 0) & (phys >= 0)
     phys = jnp.where(ok, phys, dump)
-    for key, pool_key in (("k", "pk"), ("v", "pv")):
-        out[pool_key] = cache[pool_key].at[phys, off].set(
-            new[key][b_idx, idx].astype(cache[pool_key].dtype))
+    _scatter_kv(cache, out,
+                {key: new[key][b_idx, idx] for key in ("k", "v")},
+                phys, off)                                     # (B,take,H,D)
     out["ppos"] = cache["ppos"].at[phys, off].set(
         jnp.where(ok, pos_w, -1))
     return out
@@ -256,9 +348,8 @@ def paged_write_decode(cache: dict, new: dict, lengths, block_tables,
     if active is not None:
         ok &= active
     phys = jnp.where(ok, phys, dump)
-    for key, pool_key in (("k", "pk"), ("v", "pv")):
-        out[pool_key] = cache[pool_key].at[phys, off].set(
-            new[key][:, 0].astype(cache[pool_key].dtype))
+    _scatter_kv(cache, out, {key: new[key][:, 0] for key in ("k", "v")},
+                phys, off)                                     # (B, H, D)
     out["ppos"] = cache["ppos"].at[phys, off].set(
         jnp.where(ok, lengths, -1))
     return out
@@ -267,11 +358,15 @@ def paged_write_decode(cache: dict, new: dict, lengths, block_tables,
 def paged_gather(cache: dict, block_tables):
     """Dense per-slot view of the pool: (B, pages*page, H, D) k/v plus
     (B, pages*page) positions.  Unallocated table entries read the dump
-    page and are masked to pos = -1."""
+    page and are masked to pos = -1.  Quantized pools are dequantized on
+    gather (fp32 out; callers cast to their compute dtype)."""
     dump = cache["ppos"].shape[0] - 1
     safe = jnp.where(block_tables >= 0, block_tables, dump)
     k = cache["pk"][safe]                      # (B, pages, page, H, D)
     v = cache["pv"][safe]
+    if "pk_scale" in cache:
+        k = dequantize_kv(k, cache["pk_scale"][safe])
+        v = dequantize_kv(v, cache["pv_scale"][safe])
     kp = jnp.where((block_tables >= 0)[..., None],
                    cache["ppos"][safe], -1)    # (B, pages, page)
     B, npg, page = kp.shape
@@ -294,19 +389,20 @@ def copy_pages(cache, src, dst, keep_below) -> dict:
     if "ppos" not in cache:
         return cache
     out = dict(cache)
+    data_keys = [k for k in PAGED_DATA_KEYS if k in cache]
     if cache["ppos"].ndim == 3:          # leading scan-repeats dim
         pos = cache["ppos"][:, src]                      # (R, N, page)
         keep = (pos >= 0) & (pos < keep_below[None, :, None])
         out["ppos"] = cache["ppos"].at[:, dst].set(
             jnp.where(keep, pos, -1))
-        out["pk"] = cache["pk"].at[:, dst].set(cache["pk"][:, src])
-        out["pv"] = cache["pv"].at[:, dst].set(cache["pv"][:, src])
+        for k in data_keys:
+            out[k] = cache[k].at[:, dst].set(cache[k][:, src])
     else:
         pos = cache["ppos"][src]                         # (N, page)
         keep = (pos >= 0) & (pos < keep_below[:, None])
         out["ppos"] = cache["ppos"].at[dst].set(jnp.where(keep, pos, -1))
-        out["pk"] = cache["pk"].at[dst].set(cache["pk"][src])
-        out["pv"] = cache["pv"].at[dst].set(cache["pv"][src])
+        for k in data_keys:
+            out[k] = cache[k].at[dst].set(cache[k][src])
     return out
 
 

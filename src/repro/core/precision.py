@@ -8,6 +8,17 @@ benchmark uses).  A policy is three dtypes:
   * ``param_dtype``   — storage dtype of the weights
   * ``compute_dtype`` — dtype activations/matmuls run in
   * ``output_dtype``  — dtype of logits (kept fp32 for a stable softmax)
+
+plus one *storage* axis for the serving KV cache:
+
+  * ``kv_dtype``      — "auto" (= compute dtype), "bf16", "fp16", or
+    "int8".  int8 stores paged attention K/V pages as int8 with
+    per-entry, per-kv-head fp32 absmax scales in parallel scale pools
+    (see ``kv_cache``); it halves KV bytes/token vs bf16, doubling the
+    effective page-pool capacity and the decode kernel's arithmetic
+    intensity.  Layer families with dense per-slot state (MLA,
+    recurrent, hybrid) keep full-precision caches — the same families
+    that opt out of prefix sharing.
 """
 from __future__ import annotations
 
@@ -16,12 +27,33 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
+KV_DTYPES = ("auto", "bf16", "fp16", "int8")
+
+
+def kv_store_dtype(kv_dtype: str, compute_dtype, *, allow_int8: bool = True):
+    """Resolve a ``Policy.kv_dtype`` name to the cache storage dtype.
+
+    ``allow_int8=False`` is the dense-cache path (no scale arrays live
+    beside a dense cache), where int8 falls back to the compute dtype.
+    """
+    if kv_dtype not in KV_DTYPES:
+        raise ValueError(f"unknown kv_dtype {kv_dtype!r}; "
+                         f"one of {list(KV_DTYPES)}")
+    if kv_dtype == "auto":
+        return compute_dtype
+    if kv_dtype == "bf16":
+        return jnp.bfloat16
+    if kv_dtype == "fp16":
+        return jnp.float16
+    return jnp.int8 if allow_int8 else compute_dtype
+
 
 @dataclass(frozen=True)
 class Policy:
     param_dtype: jnp.dtype = jnp.float32
     compute_dtype: jnp.dtype = jnp.float32
     output_dtype: jnp.dtype = jnp.float32
+    kv_dtype: str = "auto"
 
     def cast_params(self, params):
         """Cast a parameter pytree to ``param_dtype`` (storage)."""
@@ -37,6 +69,13 @@ class Policy:
 
     def output_cast(self, x):
         return x.astype(self.output_dtype)
+
+    def kv_cache_dtype(self, *, dense: bool = False):
+        """Storage dtype for KV caches under this policy.  ``dense=True``
+        (per-slot caches without scale pools) maps int8 back to the
+        compute dtype — only the paged pool supports quantized storage."""
+        return kv_store_dtype(self.kv_dtype, self.compute_dtype,
+                              allow_int8=not dense)
 
 
 FP32 = Policy()

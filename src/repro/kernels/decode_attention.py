@@ -11,6 +11,11 @@ otherwise):
 Per step: q tile (Hq, D) stays resident; one (block_k, Hkv, D) cache tile
 streams in; GQA grouping is a reshape of the q rows (Hkv, g, D) batched
 against the tile.  Running softmax state (m, l, acc) lives in VMEM scratch.
+
+The quantized-pool variant (``paged_decode_attention_q8``) streams int8
+K/V pages plus their per-entry fp32 scale rows and dequantizes
+*in-register* to fp32 right before QK^T / PV — halving the HBM bytes per
+decode step versus bf16 pages while the matmuls still accumulate in fp32.
 """
 from __future__ import annotations
 
@@ -23,6 +28,38 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_BLOCK_K = 256
+
+
+def _attend_block(q, k, v, mask, m_scr, l_scr, acc_scr, *, scale,
+                  attn_softcap, g):
+    """One online-softmax accumulation step shared by every decode
+    kernel: q (Hq, D) against a fp32 K/V tile (bk, Hkv, D[v]) under a
+    (bk,) bool mask, updating the (Hkv, g[, Dv]) VMEM scratch state."""
+    Hq, D = q.shape
+    bk, Hkv, _ = k.shape
+    qg = q.reshape(Hkv, g, D)
+    # (Hkv, g, D) x (bk, Hkv, D) -> (Hkv, g, bk)
+    logits = jax.lax.dot_general(
+        qg, k, (((2,), (2,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32) * scale
+    if attn_softcap is not None:
+        logits = jnp.tanh(logits / attn_softcap) * attn_softcap
+    logits = jnp.where(mask[None, None, :], logits, -jnp.inf)
+
+    m_prev = m_scr[...]                                    # (Hkv, g)
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    p = jnp.exp(logits - m_safe[..., None])
+    p = jnp.where(mask[None, None, :], p, 0.0)
+
+    # (Hkv, g, bk) x (bk, Hkv, Dv) -> (Hkv, g, Dv)
+    pv = jax.lax.dot_general(
+        p, v, (((2,), (0,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32)
+    acc_scr[...] = acc_scr[...] * alpha[..., None] + pv
+    l_scr[...] = l_scr[...] * alpha + p.sum(-1)
+    m_scr[...] = m_new
 
 
 def shape_supported(q, k, block_k: int = DEFAULT_BLOCK_K) -> bool:
@@ -48,39 +85,16 @@ def _kernel(q_ref, k_ref, v_ref, kp_ref, qp_ref, o_ref,
     kp = kp_ref[0]                                         # (bk,)
     qp = qp_ref[0]                                         # (1,)
 
-    Hq, D = q.shape
-    bk, Hkv, _ = k.shape
-    qg = q.reshape(Hkv, g, D)
-    # (Hkv, g, D) x (bk, Hkv, D) -> (Hkv, g, bk)
-    logits = jax.lax.dot_general(
-        qg, k, (((2,), (2,)), ((0,), (1,))),
-        preferred_element_type=jnp.float32) * scale
-    if attn_softcap is not None:
-        logits = jnp.tanh(logits / attn_softcap) * attn_softcap
     mask = (kp <= qp[0]) & (kp >= 0)
     if window is not None:
         mask &= kp > (qp[0] - window)
-    logits = jnp.where(mask[None, None, :], logits, -jnp.inf)
-
-    m_prev = m_scr[...]                                    # (Hkv, g)
-    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
-    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
-    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
-    p = jnp.exp(logits - m_safe[..., None])
-    p = jnp.where(mask[None, None, :], p, 0.0)
-
-    # (Hkv, g, bk) x (bk, Hkv, Dv) -> (Hkv, g, Dv)
-    pv = jax.lax.dot_general(
-        p, v, (((2,), (0,)), ((0,), (1,))),
-        preferred_element_type=jnp.float32)
-    acc_scr[...] = acc_scr[...] * alpha[..., None] + pv
-    l_scr[...] = l_scr[...] * alpha + p.sum(-1)
-    m_scr[...] = m_new
+    _attend_block(q, k, v, mask, m_scr, l_scr, acc_scr, scale=scale,
+                  attn_softcap=attn_softcap, g=g)
 
     @pl.when(ik == nk - 1)
     def _finish():
         denom = jnp.maximum(l_scr[...], 1e-37)[..., None]
-        out = (acc_scr[...] / denom).reshape(Hq, acc_scr.shape[-1])
+        out = (acc_scr[...] / denom).reshape(q.shape[0], acc_scr.shape[-1])
         o_ref[0, 0] = out.astype(o_ref.dtype)
 
 
@@ -115,37 +129,16 @@ def _paged_kernel(bt_ref, q_ref, k_ref, v_ref, kp_ref, qp_ref, o_ref,
     qp = qp_ref[0]                                         # (1,)
     allocated = bt_ref[b, j] >= 0
 
-    Hq, D = q.shape
-    _, Hkv, _ = k.shape
-    qg = q.reshape(Hkv, g, D)
-    logits = jax.lax.dot_general(
-        qg, k, (((2,), (2,)), ((0,), (1,))),
-        preferred_element_type=jnp.float32) * scale
-    if attn_softcap is not None:
-        logits = jnp.tanh(logits / attn_softcap) * attn_softcap
     mask = (kp <= qp[0]) & (kp >= 0) & allocated
     if window is not None:
         mask &= kp > (qp[0] - window)
-    logits = jnp.where(mask[None, None, :], logits, -jnp.inf)
-
-    m_prev = m_scr[...]
-    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
-    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
-    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
-    p = jnp.exp(logits - m_safe[..., None])
-    p = jnp.where(mask[None, None, :], p, 0.0)
-
-    pv = jax.lax.dot_general(
-        p, v, (((2,), (0,)), ((0,), (1,))),
-        preferred_element_type=jnp.float32)
-    acc_scr[...] = acc_scr[...] * alpha[..., None] + pv
-    l_scr[...] = l_scr[...] * alpha + p.sum(-1)
-    m_scr[...] = m_new
+    _attend_block(q, k, v, mask, m_scr, l_scr, acc_scr, scale=scale,
+                  attn_softcap=attn_softcap, g=g)
 
     @pl.when(j == npages - 1)
     def _finish():
         denom = jnp.maximum(l_scr[...], 1e-37)[..., None]
-        out = (acc_scr[...] / denom).reshape(Hq, acc_scr.shape[-1])
+        out = (acc_scr[...] / denom).reshape(q.shape[0], acc_scr.shape[-1])
         o_ref[0, 0] = out.astype(o_ref.dtype)
 
 
@@ -200,6 +193,103 @@ def paged_decode_attention(q, kpool, vpool, ppos, block_tables, q_pos, *,
         out_shape=jax.ShapeDtypeStruct((B, 1, Hq, Dv), q.dtype),
         interpret=interpret,
     )(block_tables, q, kpool, vpool, ppos, q_pos)
+    return out
+
+
+def _paged_kernel_q8(bt_ref, q_ref, k_ref, ks_ref, v_ref, vs_ref, kp_ref,
+                     qp_ref, o_ref, m_scr, l_scr, acc_scr, *, scale,
+                     attn_softcap, window, npages, g):
+    """Quantized-pool variant of _paged_kernel: the page tile arrives as
+    int8 codes plus a per-entry (page, Hkv) fp32 scale row, and the
+    dequantize (code * scale) happens in-register before QK^T / PV — the
+    HBM stream is half the bf16 bytes, the math is still fp32."""
+    b, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                    # (Hq, D)
+    k = k_ref[0].astype(jnp.float32) \
+        * ks_ref[0].astype(jnp.float32)[..., None]         # (page, Hkv, D)
+    v = v_ref[0].astype(jnp.float32) \
+        * vs_ref[0].astype(jnp.float32)[..., None]         # (page, Hkv, Dv)
+    kp = kp_ref[0]                                         # (page,)
+    qp = qp_ref[0]                                         # (1,)
+    allocated = bt_ref[b, j] >= 0
+
+    mask = (kp <= qp[0]) & (kp >= 0) & allocated
+    if window is not None:
+        mask &= kp > (qp[0] - window)
+    _attend_block(q, k, v, mask, m_scr, l_scr, acc_scr, scale=scale,
+                  attn_softcap=attn_softcap, g=g)
+
+    @pl.when(j == npages - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-37)[..., None]
+        out = (acc_scr[...] / denom).reshape(q.shape[0], acc_scr.shape[-1])
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "scale",
+                                             "attn_softcap", "interpret"))
+def paged_decode_attention_q8(q, kpool, k_scale, vpool, v_scale, ppos,
+                              block_tables, q_pos, *,
+                              window: Optional[int], scale: float,
+                              attn_softcap: Optional[float] = None,
+                              interpret: bool = False):
+    """Decode attention over an int8-quantized paged KV pool.
+
+    Same contract as :func:`paged_decode_attention` plus the parallel
+    scale pools: kpool/vpool are (P,page,Hkv,D[v]) int8 codes and
+    k_scale/v_scale are (P,page,Hkv) fp32 per-entry absmax scales.
+    Dequantization is fused into the page stream (in-register, before
+    the matmuls)."""
+    B, _, Hq, D = q.shape
+    P, page, Hkv, Dv = vpool.shape
+    npages = block_tables.shape[1]
+    g = Hq // Hkv
+    dump = P - 1
+
+    def page_of(b, j, bt):
+        pid = bt[b, j]
+        return jnp.where(pid < 0, dump, pid)
+
+    kernel = functools.partial(_paged_kernel_q8, scale=scale,
+                               attn_softcap=attn_softcap, window=window,
+                               npages=npages, g=g)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, npages),
+        in_specs=[
+            pl.BlockSpec((1, 1, Hq, D), lambda b, j, bt: (b, 0, 0, 0)),
+            pl.BlockSpec((1, page, Hkv, D),
+                         lambda b, j, bt: (page_of(b, j, bt), 0, 0, 0)),
+            pl.BlockSpec((1, page, Hkv),
+                         lambda b, j, bt: (page_of(b, j, bt), 0, 0)),
+            pl.BlockSpec((1, page, Hkv, Dv),
+                         lambda b, j, bt: (page_of(b, j, bt), 0, 0, 0)),
+            pl.BlockSpec((1, page, Hkv),
+                         lambda b, j, bt: (page_of(b, j, bt), 0, 0)),
+            pl.BlockSpec((1, page),
+                         lambda b, j, bt: (page_of(b, j, bt), 0)),
+            pl.BlockSpec((1, 1), lambda b, j, bt: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Hq, Dv), lambda b, j, bt: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Hkv, g), jnp.float32),
+            pltpu.VMEM((Hkv, g), jnp.float32),
+            pltpu.VMEM((Hkv, g, Dv), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, 1, Hq, Dv), q.dtype),
+        interpret=interpret,
+    )(block_tables, q, kpool, k_scale, vpool, v_scale, ppos, q_pos)
     return out
 
 

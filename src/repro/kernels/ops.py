@@ -64,12 +64,19 @@ def maybe_decode_attention(q, k, v, k_pos, q_pos, *, window, scale,
 
 
 def maybe_paged_decode_attention(q, kpool, vpool, ppos, block_tables, q_pos,
-                                 *, window, scale, attn_softcap=None):
+                                 *, window, scale, attn_softcap=None,
+                                 k_scale=None, v_scale=None):
     if _MODE == "off":
         return None
     from repro.kernels import decode_attention as DA
     if not DA.paged_shape_supported(q, kpool, block_tables):
         return None
+    if k_scale is not None:
+        # int8 pool: dequantization fused into the page stream
+        return DA.paged_decode_attention_q8(
+            q, kpool, k_scale, vpool, v_scale, ppos, block_tables, q_pos,
+            window=window, scale=scale, attn_softcap=attn_softcap,
+            interpret=(_MODE == "interpret"))
     return DA.paged_decode_attention(q, kpool, vpool, ppos, block_tables,
                                      q_pos, window=window, scale=scale,
                                      attn_softcap=attn_softcap,

@@ -44,15 +44,22 @@ def decode_attention_ref(q, k, v, k_pos, q_pos, *, window: Optional[int],
 
 def paged_decode_attention_ref(q, kpool, vpool, ppos, block_tables, q_pos, *,
                                window: Optional[int], scale: float,
-                               attn_softcap: Optional[float] = None):
+                               attn_softcap: Optional[float] = None,
+                               k_scale=None, v_scale=None):
     """Dense-gather oracle for the paged decode kernel: resolve each slot's
     block table into a contiguous (B, npages*page, ...) view (the same
     ``kv_cache.paged_gather`` the production fallback uses), then run the
-    dense decode reference."""
+    dense decode reference.  With ``k_scale``/``v_scale`` the pools hold
+    int8 codes and the gather dequantizes them — the fp32 target the
+    fused-dequant Pallas kernel must match."""
     from repro.core.kv_cache import paged_gather
-    k, v, kp = paged_gather({"pk": kpool, "pv": vpool, "ppos": ppos},
-                            block_tables)
-    return decode_attention_ref(q, k, v, kp, q_pos, window=window,
+    pool = {"pk": kpool, "pv": vpool, "ppos": ppos}
+    if k_scale is not None:
+        pool["pk_scale"] = k_scale
+        pool["pv_scale"] = v_scale
+    k, v, kp = paged_gather(pool, block_tables)
+    return decode_attention_ref(q, k.astype(q.dtype), v.astype(q.dtype),
+                                kp, q_pos, window=window,
                                 scale=scale, attn_softcap=attn_softcap)
 
 

@@ -7,6 +7,7 @@ a synthetic request stream, printing latency/throughput stats.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
@@ -33,6 +34,13 @@ def main():
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--policy", default="bf16",
                     choices=["fp32", "bf16", "fp16"])
+    ap.add_argument("--kv-dtype", default="auto",
+                    choices=["auto", "bf16", "fp16", "int8"],
+                    help="KV-cache storage dtype (continuous paged pool): "
+                         "auto = compute dtype; int8 stores quantized "
+                         "pages + per-entry scales, halving KV bytes per "
+                         "token (dense-state layer families keep full "
+                         "precision)")
     ap.add_argument("--no-kv-cache", action="store_true",
                     help="paper baseline mode")
     ap.add_argument("--no-pipeline", action="store_true")
@@ -61,6 +69,8 @@ def main():
         raise SystemExit("serve.py drives text archs; audio/VLM backbones "
                          "are exercised via dryrun + smoke tests")
     policy = get_policy(args.policy)
+    if args.kv_dtype != "auto":
+        policy = dataclasses.replace(policy, kv_dtype=args.kv_dtype)
     params = T.init_params(jax.random.PRNGKey(0), cfg, policy)
 
     corpus = synthetic_corpus(600)
@@ -108,6 +118,11 @@ def main():
             "prefix_matched_tokens": metrics.prefix_matched_tokens,
             "pages_shared": metrics.pages_shared,
             "cow_copies": metrics.cow_copies,
+            "kv_dtype": metrics.kv_dtype,
+            "kv_pool_bytes": metrics.kv_pool_bytes,
+            "kv_bytes_per_token": round(metrics.kv_bytes_per_token, 1),
+            "peak_pages_in_use": metrics.peak_pages_in_use,
+            "admission_stalls": metrics.admission_stalls,
             "mode": "continuous-paged"}))
         return
 

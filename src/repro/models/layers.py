@@ -149,17 +149,20 @@ def mha_attention_paged(q, pool, block_tables, q_pos, *,
                         attn_softcap: Optional[float] = None):
     """Decode attention against a paged KV pool (continuous batching).
 
-    q: (B,1,Hq,D); pool: {"pk"/"pv": (P,page,Hkv,D), "ppos": (P,page)};
+    q: (B,1,Hq,D); pool: {"pk"/"pv": (P,page,Hkv,D), "ppos": (P,page)},
+    plus "pk_scale"/"pv_scale" (P,page,Hkv) when the pool stores int8;
     block_tables: (B, pages_per_slot) physical page ids (-1 = none).
 
     Dispatch: paged Pallas kernel (gathers pages in-kernel via scalar-
-    prefetched block tables) -> dense gather + reference attention.
+    prefetched block tables; int8 pools dequantize in-register) ->
+    dense gather (dequantizing) + reference attention.
     """
     from repro.core import kv_cache as KV
     from repro.kernels import ops as kops
     out = kops.maybe_paged_decode_attention(
         q, pool["pk"], pool["pv"], pool["ppos"], block_tables, q_pos,
-        window=window, scale=scale, attn_softcap=attn_softcap)
+        window=window, scale=scale, attn_softcap=attn_softcap,
+        k_scale=pool.get("pk_scale"), v_scale=pool.get("pv_scale"))
     if out is not None:
         return out
     kk, vv, kp = KV.paged_gather(pool, block_tables)

@@ -118,17 +118,21 @@ def cache_struct(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def init_paged_cache(cfg: ModelConfig, *, num_pages: int, page_size: int,
-                     max_slots: int, max_len: int, dtype=jnp.bfloat16):
+                     max_slots: int, max_len: int, dtype=jnp.bfloat16,
+                     kv_dtype: str = "auto"):
     """Paged-pool model cache for continuous batching: attention layers
     share ``num_pages`` fixed-size pages (+1 reserved dump page) indexed
     through per-slot block tables; MLA / recurrent layers keep dense
-    per-slot state.  Same stacked-over-repeats layout as init_cache."""
+    per-slot state.  Same stacked-over-repeats layout as init_cache.
+    ``kv_dtype`` selects pool storage (int8 adds per-entry scale pools;
+    see ``kv_cache.paged_layer_cache_shape``)."""
     layers = []
     for stack in cfg.stacks:
         per_pos = []
         for spec in stack.pattern:
             one = KV.paged_layer_cache_shape(cfg, spec, num_pages, page_size,
-                                             max_slots, max_len, dtype)
+                                             max_slots, max_len, dtype,
+                                             kv_dtype=kv_dtype)
             per_pos.append(jax.tree.map(
                 lambda a, r=stack.repeats: jnp.tile(
                     a[None], (r,) + (1,) * a.ndim), one))
@@ -166,7 +170,8 @@ def layer_apply(cfg: ModelConfig, spec: LayerSpec, p, x, *, positions,
         scale = L.attn_scale(cfg)
         if is_paged:
             bt = paged["block_tables"]
-            pool = {n: cache[n] for n in KV.PAGED_KEYS}
+            pool = {n: cache[n] for n in KV.PAGED_KEYS if n in cache}
+            quant = "pk_scale" in pool
             ring = KV.paged_ring_len(window, pool["ppos"].shape[1],
                                      bt.shape[1])
             if mode == "decode":
@@ -176,7 +181,7 @@ def layer_apply(cfg: ModelConfig, spec: LayerSpec, p, x, *, positions,
                 ctx = L.mha_attention_paged(
                     q, c_attn, bt, positions, window=window, scale=scale,
                     attn_softcap=cfg.attn_softcap)
-            elif attend_cache:
+            elif attend_cache or (quant and window is None):
                 # prefix-cached admission: the prompt's suffix is written
                 # into this request's own pages first, then queries attend
                 # the *gathered* block table — shared prefix pages (mapped
@@ -184,6 +189,11 @@ def layer_apply(cfg: ModelConfig, spec: LayerSpec, p, x, *, positions,
                 # Only windowless full attention reaches here (ring layers
                 # opt out of sharing: their pages are overwritten in
                 # place, see prefix_cache.shareable).
+                # Quantized pools take this path even without a prefix
+                # match (start == 0): attending the written-then-gathered
+                # pages means every query sees the same dequantized K/V
+                # that decode will later read, which keeps shared-prefix
+                # int8 serving bit-identical to unshared int8 serving.
                 c_attn = KV.paged_write_prefill(
                     pool, {"k": k, "v": v}, cache_pos, bt, ring_len=ring)
                 kk, vv, kp = KV.paged_gather(c_attn, bt)

@@ -80,7 +80,7 @@ def test_roofline_reader_on_artifacts():
 def test_report_sections():
     from benchmarks import report
     recs_dir = os.path.join(ROOT, "experiments", "dryrun")
-    if not os.listdir(recs_dir):
+    if not os.path.isdir(recs_dir) or not os.listdir(recs_dir):
         pytest.skip("no artifacts")
     md = report.roofline_section()
     assert "| arch |" in md and "dominant" in md.lower()

@@ -186,24 +186,34 @@ def test_trie_evict_leaf_before_parent():
 # ---------------------------------------------------------------------------
 
 
-def test_copy_pages_keeps_prefix_masks_tail(rng):
+@pytest.mark.parametrize("quantized", [False, True])
+def test_copy_pages_keeps_prefix_masks_tail(rng, quantized):
     P, page, H, D = 4, 4, 2, 8
     pool = {"pk": jnp.asarray(rng.normal(size=(P, page, H, D)), jnp.float32),
             "pv": jnp.asarray(rng.normal(size=(P, page, H, D)), jnp.float32),
             "ppos": jnp.asarray([[4, 5, 6, 7], [-1] * 4, [-1] * 4,
                                  [-1] * 4], jnp.int32)}
+    if quantized:
+        # int8 pool layout: codes + per-entry scale pools travel together
+        for kk in ("pk", "pv"):
+            q, s = KV.quantize_kv(pool[kk])
+            pool[kk] = q
+            pool[kk + "_scale"] = s
     out = KV.copy_pages(pool, jnp.asarray([0]), jnp.asarray([2]),
                         jnp.asarray([6]))
     # entries at positions 4,5 kept; 6,7 beyond the match masked
     np.testing.assert_array_equal(np.asarray(out["ppos"][2]),
                                   [4, 5, -1, -1])
-    np.testing.assert_allclose(np.asarray(out["pk"][2]),
-                               np.asarray(pool["pk"][0]))
+    data_keys = [k for k in KV.PAGED_DATA_KEYS if k in pool]
+    for kk in data_keys:
+        np.testing.assert_allclose(np.asarray(out[kk][2]),
+                                   np.asarray(pool[kk][0]))
     # the source page is bit-untouched (copy, not move)
     np.testing.assert_array_equal(np.asarray(out["ppos"][0]),
                                   np.asarray(pool["ppos"][0]))
-    np.testing.assert_allclose(np.asarray(out["pk"][0]),
-                               np.asarray(pool["pk"][0]))
+    for kk in data_keys:
+        np.testing.assert_allclose(np.asarray(out[kk][0]),
+                                   np.asarray(pool[kk][0]))
 
 
 def test_copy_pages_dump_row_noop():

@@ -20,9 +20,12 @@ from repro import perf_flags
 
 def _fake_mesh():
     """Abstract 16x16 mesh for spec computation (no devices needed)."""
-    import numpy as np_
     from jax.sharding import AbstractMesh
-    return AbstractMesh((16, 16), ("data", "model"))
+    try:
+        return AbstractMesh((16, 16), ("data", "model"))
+    except TypeError:
+        # older AbstractMesh signature: one tuple of (name, size) pairs
+        return AbstractMesh((("data", 16), ("model", 16)))
 
 
 def test_param_pspecs_shapes():
