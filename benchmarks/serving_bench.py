@@ -22,6 +22,12 @@ int8 under an equal-bytes pool budget (int8 gets 2x the pages) and
 records tokens/s, p50/p99, admission stalls and prefix evictions per
 leg, plus greedy-output parity against a full-precision reference.
 
+``--spec {ngram,draft}`` adds a speculative-decoding leg: the same trace
+served with draft-verify decoding (prompt-lookup n-gram drafter, or the
+model self-drafting for the "draft" smoke), recording acceptance rate,
+tokens per forward, tokens/s — and greedy parity vs the non-speculative
+continuous run, which must be bit-exact.
+
 Results are also written as machine-readable JSON (--out, default
 ``BENCH_serving.json``) so the perf trajectory is tracked across PRs.
 
@@ -149,13 +155,13 @@ def run_bucket(engine: InferenceEngine, reqs, sp, arrivals=None) -> dict:
 
 def run_continuous(engine: InferenceEngine, reqs, sp, *, page_size,
                    steps_per_sync, arrivals=None, prefix_cache=False,
-                   num_pages=None) -> dict:
+                   num_pages=None, spec=None) -> dict:
     t0 = time.perf_counter()
     _, m = engine.serve_continuous(reqs, sp, page_size=page_size,
                                    num_pages=num_pages,
                                    steps_per_sync=steps_per_sync,
                                    arrivals=arrivals,
-                                   prefix_cache=prefix_cache)
+                                   prefix_cache=prefix_cache, spec=spec)
     wall = time.perf_counter() - t0
     return {
         "wall_s": round(wall, 3),
@@ -177,6 +183,12 @@ def run_continuous(engine: InferenceEngine, reqs, sp, *, page_size,
         "peak_pages_in_use": m.peak_pages_in_use,
         "admission_stalls": m.admission_stalls,
         "rejected": m.rejected,
+        "spec_mode": m.spec_mode,
+        "spec_k": m.spec_k,
+        "drafted_tokens": m.drafted_tokens,
+        "accepted_tokens": m.accepted_tokens,
+        "acceptance_rate": round(m.acceptance_rate, 3),
+        "tokens_per_forward": round(m.tokens_per_forward, 3),
     }
 
 
@@ -235,6 +247,33 @@ def run_kv_sweep(args, cfg, params, base_policy, trace, sp, arrivals):
     }
 
 
+def run_spec_leg(args, engine_factory, trace, sp, arrivals, baseline_reqs):
+    """Serve the trace with draft-verify decoding and compare against the
+    non-speculative continuous outputs: greedy parity must be bit-exact
+    (the rejection sampler's guarantee), and the acceptance rate /
+    tokens-per-forward quantify how much forward-count the drafter
+    saved."""
+    from repro.core.speculative import SpecConfig
+    spec = SpecConfig(k=args.spec_k,
+                      drafter=("ngram" if args.spec == "ngram"
+                               else "draft_model"),
+                      max_ngram=args.spec_ngram)
+    eng = engine_factory()
+    run_continuous(eng, copy.deepcopy(trace), sp,          # warm compile
+                   page_size=args.page_size, num_pages=args.num_pages,
+                   steps_per_sync=args.steps_per_sync,
+                   prefix_cache=True, spec=spec)
+    eng.reset_prefix_cache()
+    reqs = copy.deepcopy(trace)
+    leg = run_continuous(eng, reqs, sp, page_size=args.page_size,
+                         num_pages=args.num_pages,
+                         steps_per_sync=args.steps_per_sync,
+                         arrivals=arrivals, prefix_cache=True, spec=spec)
+    leg["outputs_match_nonspec"] = all(
+        a.result == b.result for a, b in zip(reqs, baseline_reqs))
+    return leg
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="unimo-text", choices=list_archs())
@@ -261,6 +300,18 @@ def main():
     ap.add_argument("--kv-budget-pages", type=int, default=None,
                     help="bf16 page budget for --kv-sweep (int8 gets 2x); "
                          "default: half the slots' worth of pages")
+    ap.add_argument("--spec", default="off",
+                    choices=["off", "ngram", "draft"],
+                    help="add a speculative-decoding leg: ngram = "
+                         "prompt-lookup drafter (no extra weights); "
+                         "draft = draft-model drafter (self-drafting "
+                         "smoke: the target model drafts for itself, so "
+                         "greedy acceptance is ~100%%)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="drafted tokens per slot per verify step")
+    ap.add_argument("--spec-ngram", type=int, default=3,
+                    help="longest trailing n-gram the lookup drafter "
+                         "matches")
     ap.add_argument("--poisson", type=float, default=None,
                     help="arrival rate (req/s) for an open-loop trace; "
                          "default: all requests arrive at t=0")
@@ -352,6 +403,16 @@ def main():
         - pfx["prefill_tokens"],
         "outputs_identical_prefix_on_off": identical,
     }
+    if args.spec != "off":
+        leg = run_spec_leg(args, fresh_engine, trace, sp, arrivals,
+                           cont_reqs)
+        report["speculative"] = leg
+        # like-for-like: the spec leg runs with the prefix cache on, so
+        # its throughput baseline is the prefix leg, not the bare
+        # continuous leg (outputs are bit-identical to both regardless)
+        report["spec_speedup_tokens_per_s"] = round(
+            leg["tokens_per_s"] / pfx["tokens_per_s"], 3) \
+            if pfx["tokens_per_s"] else float("nan")
     if args.kv_sweep:
         report["kv_sweep"] = run_kv_sweep(args, cfg, params, policy,
                                           trace, sp, arrivals)

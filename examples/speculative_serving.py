@@ -1,0 +1,69 @@
+"""Speculative decoding on the continuous serving path.
+
+Serves one trace three ways — plain continuous decoding, draft-verify
+with the n-gram prompt-lookup drafter, and draft-verify with a draft
+model (here: the model drafting for itself, the degenerate reference
+setup whose greedy drafts are always accepted) — and shows that
+
+  * the greedy token streams are bit-identical across all three (the
+    rejection sampler is exact-match greedy at temperature 0), and
+  * speculation raises tokens-per-forward: each verify forward can emit
+    several accepted tokens per slot instead of exactly one.
+
+Run:  PYTHONPATH=src python examples/speculative_serving.py
+"""
+import copy
+
+import jax
+import numpy as np
+
+from repro.configs.registry import get_reduced
+from repro.core.engine import InferenceEngine
+from repro.core.precision import FP32
+from repro.core.scheduler import Request
+from repro.core.speculative import SpecConfig
+from repro.models import transformer as T
+
+
+def main():
+    cfg = get_reduced("qwen3-4b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+
+    # a multi-tenant-ish trace: requests share a system prompt, which
+    # also gives the n-gram drafter history to look continuations up in
+    shared = [2] + list(map(int, rng.integers(4, 400, size=24)))
+    reqs = [Request(uid=i,
+                    tokens=shared + list(map(int, rng.integers(
+                        4, 400, size=int(rng.integers(2, 8))))),
+                    max_new_tokens=16)
+            for i in range(8)]
+
+    def serve(spec):
+        eng = InferenceEngine(cfg, params, policy=FP32, max_len=96,
+                              max_batch=4)
+        done, m = eng.serve_continuous(copy.deepcopy(reqs), page_size=8,
+                                       spec=spec)
+        return done, m
+
+    base, m0 = serve(None)
+    ngram, m1 = serve(SpecConfig(k=4, drafter="ngram"))
+    draft, m2 = serve(SpecConfig(k=4, drafter="draft_model"))
+
+    for name, done, m in (("continuous", base, m0),
+                          ("spec/ngram", ngram, m1),
+                          ("spec/draft", draft, m2)):
+        ident = all(a.result == b.result for a, b in zip(base, done))
+        print(f"{name:12s} tokens/forward={m.tokens_per_forward:5.2f}  "
+              f"acceptance={m.acceptance_rate:5.2f}  "
+              f"drafted={m.drafted_tokens:4d}  "
+              f"outputs==continuous: {ident}")
+        assert ident, "speculative greedy serving must be bit-identical"
+    assert m2.tokens_per_forward > 1.0
+    print("\nK tuning: larger k amortizes more forwards when acceptance "
+          "is high (self-draft), but wastes verify width when the "
+          "drafter misses (k=4 is a reasonable default).")
+
+
+if __name__ == "__main__":
+    main()

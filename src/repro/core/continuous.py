@@ -148,12 +148,36 @@ class ServeMetrics:
     kv_bytes_per_token: float = 0.0  # pool bytes / token of capacity
     peak_pages_in_use: int = 0       # high-water mark of allocated pages
     admission_stalls: int = 0        # syncs a free slot waited on the pool
+    # -- speculative decoding -----------------------------------------------
+    spec_mode: str = "off"           # drafter this run used (off|ngram|...)
+    spec_k: int = 0                  # drafted tokens per slot per step
+    drafted_tokens: int = 0          # drafts offered to the verifier
+    accepted_tokens: int = 0         # drafts kept by the rejection sampler
+    decode_tokens: int = 0           # tokens emitted by decode/verify steps
+    #   (generated_tokens minus the one-per-request admission sample)
 
     @property
     def decode_idle_frac(self) -> float:
         if not self.slot_steps_total:
             return 0.0
         return 1.0 - self.slot_steps_active / self.slot_steps_total
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of drafted tokens the verifier accepted (0 when the
+        run drafted nothing — speculation off, or every slot rejected)."""
+        if not self.drafted_tokens:
+            return 0.0
+        return self.accepted_tokens / self.drafted_tokens
+
+    @property
+    def tokens_per_forward(self) -> float:
+        """Mean tokens emitted per live slot per decode/verify forward.
+        Non-speculative serving is bounded by 1.0 (an EOS forward emits
+        nothing); acceptance pushes speculative serving above it."""
+        if not self.slot_steps_active:
+            return 0.0
+        return self.decode_tokens / self.slot_steps_active
 
     @property
     def prefill_pad_frac(self) -> float:

@@ -28,7 +28,8 @@ from repro.core import pruning as PR
 from repro.core.continuous import (ContinuousScheduler, PageAllocator,
                                    ServeMetrics)
 from repro.core.precision import BF16, Policy
-from repro.core.sampling import SamplingParams, sample
+from repro.core.sampling import SamplingParams, sample, speculative_verify
+from repro.core.speculative import SpecConfig, get_drafter
 from repro.core.scheduler import (DEFAULT_BUCKETS, Batch, DynamicBatcher,
                                   Request, pad_batch, pick_bucket,
                                   truncate_prompt)
@@ -443,6 +444,72 @@ class InferenceEngine:
         self._cont_cache[key] = fns
         return fns
 
+    def _spec_fns(self, sp: SamplingParams, k: int):
+        """Build (once per (sp, k)) the jitted draft-verify decode step:
+        ONE target forward scores the pending token plus ``k`` drafted
+        tokens per slot against the paged pools (multi-token KV write +
+        multi-query paged attention), the rejection sampler keeps the
+        longest valid prefix per slot (exact-match greedy at temperature
+        0), EOS/budget clamps are applied on device, and the rejected
+        tail's KV entries are rewound (``paged_truncate_all``) before
+        anything downstream — retire-time prefix-cache inserts in
+        particular — can observe them."""
+        key = ("spec", sp, k)
+        cached = self._cont_cache.get(key)
+        if cached is not None:
+            return cached
+        cfg, policy, max_len = self.cfg, self.policy, self.max_len
+
+        def verify_fn(params, tok, lens, rem, act, drafts, block_tables,
+                      cache, rng):
+            K = drafts.shape[1]
+            toks_in = jnp.concatenate([tok[:, None], drafts], axis=1)
+            logits, cache = T.forward_verify(
+                params, cfg, toks_in, cache, lens, policy=policy,
+                max_len=max_len,
+                paged={"block_tables": block_tables, "active": act})
+            rng, sub = jax.random.split(rng)
+            accept_len, nxt = speculative_verify(logits, drafts, sub, sp)
+            # the step's nominal emit stream: the accepted drafts
+            # verbatim, then the corrective/bonus token at index
+            # accept_len — each element exactly distributed as
+            # sequential sampling (greedy: each is an argmax)
+            idx1 = jnp.arange(K + 1)[None, :]
+            stream = jnp.concatenate(
+                [drafts, jnp.zeros_like(nxt[:, None])], axis=1)
+            stream = jnp.where(idx1 == accept_len[:, None], nxt[:, None],
+                               stream)                          # (B, K+1)
+            # budget truncation keeps a PREFIX of the stream (the last
+            # budgeted token is the accepted draft itself — recomputing
+            # a prediction at the clamped position would skip ahead)
+            limit = jnp.minimum(accept_len + 1, jnp.maximum(rem, 0))
+            # EOS anywhere in the emittable prefix ends the request
+            # there; EOS itself is never emitted
+            eos_hit = (stream == EOS) & (idx1 < limit[:, None])
+            eos_pos = jnp.min(jnp.where(eos_hit, idx1, K + 1), axis=1)
+            n_emit = jnp.where(act, jnp.minimum(limit, eos_pos), 0)
+            done = eos_pos < limit
+            emits = jnp.where(idx1 < n_emit[:, None], stream, -1)
+            # written accepted context = pending token + the drafts that
+            # were emitted (a trailing emitted `nxt` is pending, not yet
+            # written — it lands at new_lens on the next step)
+            d_count = jnp.minimum(accept_len, n_emit)
+            new_lens = lens + jnp.where(act, d_count + 1, 0)
+            new_rem = rem - n_emit.astype(rem.dtype)
+            still = act & ~done & (new_rem > 0)
+            tok = jnp.where(still, nxt, tok)
+            # rewind rejected/stale entries: after this, every stored
+            # position < new_lens holds final accepted context and
+            # nothing at or beyond it is visible
+            cache = KV.paged_truncate_all(cache, block_tables, new_lens)
+            return (tok, new_lens, new_rem, still, cache, rng, emits,
+                    jnp.where(act, d_count, 0))
+
+        fn = jax.jit(verify_fn,
+                     donate_argnums=(7,) if self._donate else ())
+        self._cont_cache[key] = fn
+        return fn
+
     def serve_continuous(self, requests: List[Request],
                          sp: SamplingParams = SamplingParams(), *,
                          page_size: int = 16,
@@ -450,7 +517,8 @@ class InferenceEngine:
                          slots: Optional[int] = None,
                          steps_per_sync: int = 4,
                          arrivals: Optional[List[float]] = None,
-                         prefix_cache: Optional[bool] = None):
+                         prefix_cache: Optional[bool] = None,
+                         spec: Optional[SpecConfig] = None):
         """Serve requests with continuous batching over a paged KV cache.
 
         Unlike :meth:`serve` (sort -> bucket -> drain), decode slots are
@@ -472,6 +540,17 @@ class InferenceEngine:
         order as ``requests``) for open-loop traces; requests only become
         admissible once their arrival time has passed.
 
+        spec: a :class:`~repro.core.speculative.SpecConfig` enables
+        draft–verify decoding: each decode step drafts ``spec.k`` tokens
+        per slot (host-side), verifies them in ONE multi-token forward,
+        and accepts the longest valid prefix — distribution preserving,
+        bit-identical under greedy.  Requires the same layer families as
+        prefix sharing (pure non-windowed attention; ring overwrites and
+        recurrent state cannot be rolled back on rejection) — elsewhere
+        it warns and serves non-speculatively.  ``steps_per_sync`` is
+        ignored in speculative mode: drafting needs the emitted history
+        after every verify, so each step is one host sync.
+
         Returns (requests, ServeMetrics); ``r.result`` is filled like
         :meth:`serve`.
         """
@@ -488,6 +567,27 @@ class InferenceEngine:
             warnings.warn(f"prefix_cache requested but disabled — "
                           f"{share_reason}")
             share = False
+        spec_on = spec is not None
+        if spec_on:
+            spec_reason = PC.shareable(self.cfg, self.max_len)
+            if spec_reason is not None:
+                warnings.warn("speculative decoding requested but "
+                              f"disabled — {spec_reason}")
+                spec_on = False
+        drafter = verify_fn = None
+        if spec_on:
+            # one-entry cache keyed on the SpecConfig object itself (held
+            # strongly, so `is` can never alias a recycled address): the
+            # draft-model drafter carries jit caches worth keeping across
+            # serve calls with the same spec
+            cached = self._cont_cache.get("drafter")
+            if cached is not None and cached[0] is spec:
+                drafter = cached[1]
+            else:
+                drafter = get_drafter(spec, self.cfg, self.params,
+                                      policy=self.policy)
+                self._cont_cache["drafter"] = (spec, drafter)
+            verify_fn = self._spec_fns(sp, drafter.k)
         admit_fn, admit_prefix_fn, step_fn = \
             self._continuous_fns(sp, steps_per_sync)
         buckets = self.prompt_buckets()
@@ -507,7 +607,9 @@ class InferenceEngine:
                                     prefix_cache=trie, match_prefix=share)
         metrics = ServeMetrics(kv_dtype=ctx["kv_dtype"],
                                kv_pool_bytes=ctx["kv_pool_bytes"],
-                               kv_bytes_per_token=ctx["kv_bytes_per_token"])
+                               kv_bytes_per_token=ctx["kv_bytes_per_token"],
+                               spec_mode=drafter.name if spec_on else "off",
+                               spec_k=drafter.k if spec_on else 0)
         stats = EngineStats(batches=1)
         trie_base = trie.evicted_pages
 
@@ -693,20 +795,45 @@ class InferenceEngine:
 
             # -- fused decode steps ---------------------------------------
             td0 = time.perf_counter()
-            (tok_d, lens_d, rem_d, act_d, cache, rng, emits,
-             acts) = step_fn(self.params, jnp.asarray(tok),
-                             jnp.asarray(lens), jnp.asarray(rem),
-                             jnp.asarray(act),
-                             jnp.asarray(block_tables), cache, rng)
-            emits = np.asarray(jax.block_until_ready(emits))
-            stats.decode_s += time.perf_counter() - td0
+            if spec_on:
+                # draft (host) -> one batched verify forward -> accept
+                # the longest valid prefix per slot -> rewind rejected
+                # KV.  One host sync per verify window.
+                contexts: List[Optional[list]] = [None] * slots
+                for slot, st in sched.slots.items():
+                    if act[slot]:
+                        contexts[slot] = st.request.tokens + st.emitted
+                drafts = drafter.propose_slots(contexts)
+                (tok_d, lens_d, rem_d, act_d, cache, rng, emits,
+                 accepted) = verify_fn(
+                    self.params, jnp.asarray(tok), jnp.asarray(lens),
+                    jnp.asarray(rem), jnp.asarray(act),
+                    jnp.asarray(drafts), jnp.asarray(block_tables),
+                    cache, rng)
+                emits = np.asarray(jax.block_until_ready(emits))
+                stats.decode_s += time.perf_counter() - td0
+                n_active = int(act.sum())
+                metrics.steps += 1
+                metrics.slot_steps_total += slots
+                metrics.slot_steps_active += n_active
+                metrics.drafted_tokens += drafter.k * n_active
+                metrics.accepted_tokens += int(np.asarray(accepted).sum())
+            else:
+                (tok_d, lens_d, rem_d, act_d, cache, rng, emits,
+                 acts) = step_fn(self.params, jnp.asarray(tok),
+                                 jnp.asarray(lens), jnp.asarray(rem),
+                                 jnp.asarray(act),
+                                 jnp.asarray(block_tables), cache, rng)
+                emits = np.asarray(jax.block_until_ready(emits))
+                stats.decode_s += time.perf_counter() - td0
+                acts = np.asarray(acts)
+                metrics.steps += steps_per_sync
+                metrics.slot_steps_total += slots * steps_per_sync
+                metrics.slot_steps_active += int(acts.sum())
             tok, lens, rem = (np.array(tok_d), np.array(lens_d),
                               np.array(rem_d))
             act_new = np.array(act_d)
-            acts = np.asarray(acts)
-            metrics.steps += steps_per_sync
-            metrics.slot_steps_total += slots * steps_per_sync
-            metrics.slot_steps_active += int(acts.sum())
+            metrics.decode_tokens += int((emits >= 0).sum())
             for slot in list(sched.slots):
                 for t in emits[slot]:
                     if t >= 0:

@@ -355,6 +355,79 @@ def paged_write_decode(cache: dict, new: dict, lengths, block_tables,
     return out
 
 
+def paged_write_decode_multi(cache: dict, new: dict, lengths, block_tables,
+                             active=None, *, ring_len: int) -> dict:
+    """Scatter a speculation window of ``K1`` tokens per slot at absolute
+    positions ``lengths[b] .. lengths[b] + K1 - 1`` (the draft-verify
+    forward writes the pending token plus every drafted token in one
+    pass; rejected entries are rewound afterwards via
+    :func:`paged_truncate`).
+
+    new: {"k"/"v": (B, K1, H, D)}; ``active``: (B,) or (B, K1) bool —
+    masked entries go to the dump page.  Unlike the single-token decode
+    write, positions at or beyond ``ring_len`` are *dumped*, never
+    wrapped: a speculative write that wrapped the ring would clobber
+    live early-context entries that a rejection could not restore
+    (windowed/ring layers therefore must not take this path — the
+    engine gates speculation to non-windowed attention).
+    """
+    out = dict(cache)
+    page = cache["ppos"].shape[1]
+    dump = cache["ppos"].shape[0] - 1
+    B, K1 = new["k"].shape[:2]
+    pos = lengths[:, None] + jnp.arange(K1)[None, :]           # (B, K1)
+    ok = pos < ring_len
+    rp = jnp.where(ok, pos, 0)
+    lp, off = rp // page, rp % page
+    phys = jnp.take_along_axis(block_tables, lp, axis=1)       # (B, K1)
+    ok &= phys >= 0
+    if active is not None:
+        ok &= active if active.ndim == 2 else active[:, None]
+    phys = jnp.where(ok, phys, dump)
+    _scatter_kv(cache, out, {key: new[key] for key in ("k", "v")},
+                phys, off)                                     # (B,K1,H,D)
+    out["ppos"] = cache["ppos"].at[phys, off].set(
+        jnp.where(ok, pos, -1))
+    return out
+
+
+def paged_truncate(cache, block_tables, keep_len) -> dict:
+    """Rewind speculative writes: mark every entry of the slots' pages
+    whose absolute position is >= ``keep_len[b]`` empty (pos = -1).
+
+    Stale K/V codes (and int8 scale rows) may remain in the page pools —
+    they are unreachable once their positions are -1, exactly like the
+    stale data :func:`reset_pages` leaves behind — so only ``ppos``
+    needs rewriting.  Safe under sharing: a shared prefix page only
+    holds positions < matched_len <= keep_len, so its write-back is a
+    no-op even when several slots scatter it in one call, and dump-page
+    rows (block table -1) are always -1 already.
+    """
+    if "ppos" not in cache:
+        return cache
+    out = dict(cache)
+    # pool dim is second-to-last: ppos is (P, page) or (R, P, page)
+    dump = cache["ppos"].shape[-2] - 1
+    safe = jnp.where(block_tables >= 0, block_tables, dump)    # (B, npages)
+    if cache["ppos"].ndim == 3:          # leading scan-repeats dim
+        pos = cache["ppos"][:, safe]                 # (R, B, npages, page)
+        keep = pos < keep_len[None, :, None, None]
+        out["ppos"] = cache["ppos"].at[:, safe].set(
+            jnp.where(keep, pos, -1))
+    else:
+        pos = cache["ppos"][safe]                    # (B, npages, page)
+        keep = pos < keep_len[:, None, None]
+        out["ppos"] = cache["ppos"].at[safe].set(jnp.where(keep, pos, -1))
+    return out
+
+
+def paged_truncate_all(cache: dict, block_tables, keep_len) -> dict:
+    """:func:`paged_truncate` over every paged layer of a model cache."""
+    return {"layers": tuple(
+        tuple(paged_truncate(c, block_tables, keep_len) for c in stack_c)
+        for stack_c in cache["layers"])}
+
+
 def paged_gather(cache: dict, block_tables):
     """Dense per-slot view of the pool: (B, pages*page, H, D) k/v plus
     (B, pages*page) positions.  Unallocated table entries read the dump

@@ -1,8 +1,15 @@
-"""Token sampling for the decode loop."""
+"""Token sampling for the decode loop + the speculative rejection sampler.
+
+``sample`` draws one token per row from temperature / top-k / top-p
+filtered logits.  ``speculative_verify`` is the acceptance rule of the
+draft–verify loop (see ``core/speculative``): given the target model's
+logits over a drafted window it returns how many drafted tokens survive
+and the next token to emit, such that the emitted stream is distributed
+exactly as non-speculative sampling from the same filtered distribution.
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -12,15 +19,99 @@ import jax.numpy as jnp
 class SamplingParams:
     temperature: float = 0.0      # 0 -> greedy
     top_k: int = 0                # 0 -> full distribution
+    top_p: float = 1.0            # 1 -> no nucleus filtering
+
+
+def _filter_logits(logits, sp: SamplingParams):
+    """Temperature / top-k / top-p (nucleus) filtering.  logits: (..., V)
+    with sp.temperature > 0.  Removed tokens become -inf."""
+    logits = logits / sp.temperature
+    if sp.top_k:
+        top_vals, _ = jax.lax.top_k(logits, sp.top_k)
+        cutoff = top_vals[..., -1:]
+        logits = jnp.where(logits >= cutoff, logits, -jnp.inf)
+    if sp.top_p < 1.0:
+        # nucleus: keep the smallest set of top tokens whose cumulative
+        # probability reaches top_p.  A token is kept iff the cumulative
+        # probability of strictly-higher-ranked tokens is < top_p (so the
+        # token that crosses the threshold is included, and at least one
+        # token always survives).
+        sorted_logits = jnp.flip(jnp.sort(logits, axis=-1), axis=-1)
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum_before = jnp.cumsum(probs, axis=-1) - probs
+        keep = cum_before < sp.top_p
+        thresh = jnp.min(jnp.where(keep, sorted_logits, jnp.inf), axis=-1,
+                         keepdims=True)
+        logits = jnp.where(logits >= thresh, logits, -jnp.inf)
+    return logits
+
+
+def target_probs(logits, sp: SamplingParams):
+    """The exact distribution ``sample`` draws from: softmax of the
+    filtered logits.  logits: (..., V) -> probs (..., V)."""
+    return jax.nn.softmax(_filter_logits(logits.astype(jnp.float32), sp),
+                          axis=-1)
 
 
 def sample(logits, rng, sp: SamplingParams):
     """logits: (B, V) fp32 -> (B,) int32 token ids."""
     if sp.temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    logits = logits / sp.temperature
-    if sp.top_k:
-        top_vals, _ = jax.lax.top_k(logits, sp.top_k)
-        cutoff = top_vals[:, -1:]
-        logits = jnp.where(logits >= cutoff, logits, -jnp.inf)
-    return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(rng, _filter_logits(logits, sp),
+                                  axis=-1).astype(jnp.int32)
+
+
+def speculative_verify(logits, drafts, rng, sp: SamplingParams):
+    """Rejection-sample a drafted window against the target logits.
+
+    logits: (B, K+1, V) target logits at the K+1 speculated positions
+    (position j scored the input [current_token, d_1..d_j]); drafts:
+    (B, K) proposed continuation tokens.  Returns (accept_len (B,) int32
+    in [0, K], next_token (B,) int32): drafts[:, :accept_len] are kept
+    verbatim and ``next_token`` follows them.
+
+    The drafters in ``core/speculative`` are deterministic, i.e. the
+    proposal q_j is a point mass at d_{j+1}.  The standard speculative
+    acceptance rule (accept x ~ q with probability min(1, p(x)/q(x)),
+    else resample from norm(max(p - q, 0))) then reduces to: accept
+    d_{j+1} with probability p_j(d_{j+1}); on rejection resample from
+    p_j with d_{j+1} removed and renormalized.  This is distribution
+    preserving at every position: P(emit x at j) = p_j(x)·[x = d] +
+    (1 - p_j(d)) · p_j(x)·[x != d] / (1 - p_j(d)) = p_j(x).  With
+    ``temperature == 0`` p_j is a point mass at argmax, so the rule
+    becomes exact-match greedy: accept while argmax == draft, and the
+    corrective token is the argmax at the first mismatch — bit-identical
+    to non-speculative greedy decoding.
+    """
+    B, K = drafts.shape
+    b_idx = jnp.arange(B)
+    if sp.temperature <= 0.0:
+        pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (B, K+1)
+        ok = pred[:, :K] == drafts
+        accept_len = jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=1),
+                             axis=1)
+        next_token = pred[b_idx, accept_len]
+        return accept_len.astype(jnp.int32), next_token
+    p = target_probs(logits, sp)                               # (B, K+1, V)
+    p_draft = jnp.take_along_axis(
+        p[:, :K], drafts[..., None], axis=-1)[..., 0]          # (B, K)
+    u_key, r_key = jax.random.split(rng)
+    u = jax.random.uniform(u_key, (B, K))
+    ok = u < p_draft
+    accept_len = jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=1), axis=1)
+    # residual at the first rejected position: p with the rejected draft
+    # token removed, renormalized (the point-mass proposal's max(p-q, 0));
+    # when every draft is accepted the bonus position's p is unfiltered.
+    p_next = p[b_idx, accept_len]                              # (B, V)
+    rejected = accept_len < K
+    rej_tok = drafts[b_idx, jnp.minimum(accept_len, K - 1)]
+    hole = jax.nn.one_hot(rej_tok, p.shape[-1], dtype=bool)
+    p_next = jnp.where(rejected[:, None] & hole, 0.0, p_next)
+    total = jnp.sum(p_next, axis=-1, keepdims=True)
+    # degenerate residual (all mass was on the rejected token — cannot
+    # happen with exact arithmetic since then it would have been
+    # accepted w.p. 1, but guard float round-off): fall back to p.
+    p_next = jnp.where(total > 0.0, p_next, p[b_idx, accept_len])
+    next_token = jax.random.categorical(
+        r_key, jnp.log(jnp.maximum(p_next, 1e-38)), axis=-1)
+    return accept_len.astype(jnp.int32), next_token.astype(jnp.int32)

@@ -1,0 +1,212 @@
+"""Speculative decoding — drafters for the draft-verify serving loop.
+
+Decode latency on the continuous path is bound by the number of target-
+model forwards: one token per slot per forward.  Speculative decoding
+converts spare compute into accepted tokens per step: a cheap *drafter*
+proposes K continuation tokens per slot, ONE multi-token verify forward
+scores all of them against the paged KV pools
+(``models.transformer.forward_verify``), and the rejection sampler
+(``sampling.speculative_verify``) keeps the longest valid prefix — so the
+emitted stream is distributed exactly as non-speculative sampling, and is
+bit-identical under greedy decoding.
+
+Two built-in drafters:
+
+  * :class:`NgramDrafter` — prompt-lookup / self-drafting: propose the K
+    tokens that followed the most recent earlier occurrence of the
+    context's trailing n-gram.  Needs no extra weights; pays off on
+    repetitive continuations (shared system prompts, code, quotes).
+  * :class:`DraftModelDrafter` — a small draft model (any registry
+    config) decoded greedily for K tokens.  The reference implementation
+    runs full forwards over the (bucketed, right-padded) context — cheap
+    for genuinely small drafters, and exact enough for acceptance-rate
+    purposes; the *target* model never sees the drafter's arithmetic, so
+    draft quality only ever affects speed, never correctness.
+
+Drafting is host-side (the n-gram scan needs the emitted-token history
+the device doesn't keep); the verify forward, acceptance rule and KV
+rewind run fused on device (``engine.serve_continuous``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.precision import FP32, Policy
+
+
+@dataclass
+class SpecConfig:
+    """Speculative-decoding knobs for ``engine.serve_continuous``.
+
+    k: drafted tokens per slot per step (the verify window is k+1 wide).
+    drafter: "ngram" (prompt lookup, no weights) or "draft_model".
+    max_ngram/min_ngram: longest/shortest trailing n-gram the lookup
+    drafter tries to match (longer first = higher precision).
+    draft_cfg/draft_params: the draft model (any registry config).  When
+    omitted for drafter="draft_model", the target model drafts for
+    itself — the degenerate reference setup (acceptance is 100% under
+    greedy), useful for smoke tests and parity checks.
+    """
+    k: int = 4
+    drafter: str = "ngram"
+    max_ngram: int = 3
+    min_ngram: int = 1
+    draft_cfg: Any = None
+    draft_params: Any = None
+
+
+class Drafter:
+    """Proposes K continuation tokens per slot from its token context."""
+
+    name = "base"
+
+    def __init__(self, k: int):
+        self.k = k
+
+    def propose(self, context: Sequence[int]) -> List[int]:
+        raise NotImplementedError
+
+    def propose_slots(self, contexts: List[Optional[Sequence[int]]]
+                      ) -> np.ndarray:
+        """(slots, k) int32 proposals; ``None`` rows (inactive slots)
+        draft zeros — the engine masks them out of the verify write."""
+        out = np.zeros((len(contexts), self.k), np.int32)
+        for i, ctx in enumerate(contexts):
+            if ctx:
+                out[i] = self.propose(ctx)
+        return out
+
+
+class NgramDrafter(Drafter):
+    """Prompt-lookup drafting: match the context's trailing n-gram
+    against its own history and propose what followed last time.
+
+    Tries n = max_ngram .. min_ngram (longest match first, most recent
+    occurrence first), scanning at most the trailing ``scan_window``
+    tokens — host drafting stays O(window) per slot per step instead of
+    growing with the generation history (lookups further back have
+    marginal hit rates, and drafts only ever affect speed, never
+    correctness).  With no match it proposes the last token repeated —
+    greedy decoding of small models degenerates into loops often enough
+    that this fallback still earns acceptances, and a bad proposal costs
+    nothing but the (already-spent) verify slot.
+    """
+
+    name = "ngram"
+
+    def __init__(self, k: int, max_ngram: int = 3, min_ngram: int = 1,
+                 scan_window: int = 1024):
+        super().__init__(k)
+        self.max_ngram = max_ngram
+        self.min_ngram = max(1, min_ngram)
+        self.scan_window = scan_window
+
+    def propose(self, context: Sequence[int]) -> List[int]:
+        ctx = list(context[max(0, len(context) - self.scan_window):])
+        k, n_ctx = self.k, len(ctx)
+        for n in range(min(self.max_ngram, n_ctx - 1), self.min_ngram - 1,
+                       -1):
+            pat = ctx[-n:]
+            for i in range(n_ctx - n - 1, -1, -1):
+                if ctx[i:i + n] == pat:
+                    cont = ctx[i + n:i + n + k]
+                    if cont:
+                        return (cont + [cont[-1]] * k)[:k]
+        return [ctx[-1]] * k
+
+
+class DraftModelDrafter(Drafter):
+    """Greedy K-token drafting with a small draft model.
+
+    Contexts are right-padded into power-of-two width buckets (bounding
+    retraces) and drafted in one batched jitted call: K full forwards of
+    the draft model, each extending the buffer by its argmax.  Padding
+    beyond a row's length is causally invisible to the positions that
+    matter.
+    """
+
+    name = "draft_model"
+
+    def __init__(self, cfg, params, k: int, policy: Policy = FP32):
+        super().__init__(k)
+        self.cfg = cfg
+        self.params = params
+        self.policy = policy
+        self._fns = {}                       # (B, W) -> jitted draft fn
+
+    def _fn(self, B: int, W: int):
+        import jax
+        import jax.numpy as jnp
+        from repro.models import transformer as T
+        key = (B, W)
+        fn = self._fns.get(key)
+        if fn is not None:
+            return fn
+        cfg, policy, K = self.cfg, self.policy, self.k
+
+        def draft(params, buf, lens):        # buf (B, W+K), lens (B,)
+            b_idx = jnp.arange(B)
+
+            def body(j, buf):
+                logits, _ = T.forward_train(params, cfg, buf,
+                                            policy=policy, remat=False)
+                nxt = jnp.argmax(logits[b_idx, lens - 1 + j],
+                                 axis=-1).astype(jnp.int32)
+                return buf.at[b_idx, lens + j].set(nxt)
+
+            buf = jax.lax.fori_loop(0, K, body, buf)
+            pos = lens[:, None] + jnp.arange(K)[None, :]
+            return jnp.take_along_axis(buf, pos, axis=1)
+
+        fn = jax.jit(draft)
+        self._fns[key] = fn
+        return fn
+
+    def propose_slots(self, contexts: List[Optional[Sequence[int]]]
+                      ) -> np.ndarray:
+        import jax.numpy as jnp
+        live = [(i, list(ctx)) for i, ctx in enumerate(contexts) if ctx]
+        out = np.zeros((len(contexts), self.k), np.int32)
+        if not live:
+            return out
+        B = 1 << (len(live) - 1).bit_length()          # batch bucket
+        W = 1 << (max(len(c) for _, c in live) - 1).bit_length()
+        buf = np.zeros((B, W + self.k), np.int32)
+        lens = np.ones((B,), np.int32)                 # pad rows: 1 token
+        for r, (_, ctx) in enumerate(live):
+            buf[r, :len(ctx)] = ctx
+            lens[r] = len(ctx)
+        drafted = np.asarray(self._fn(B, W)(
+            self.params, jnp.asarray(buf), jnp.asarray(lens)))
+        for r, (i, _) in enumerate(live):
+            out[i] = drafted[r]
+        return out
+
+    def propose(self, context: Sequence[int]) -> List[int]:
+        return list(self.propose_slots([context])[0])
+
+
+def get_drafter(spec: SpecConfig, target_cfg=None, target_params=None,
+                policy: Policy = FP32) -> Drafter:
+    """Resolve a :class:`SpecConfig` into a drafter instance.  The
+    target model backs drafter="draft_model" when no draft config is
+    given (self-drafting: the reference/parity setup)."""
+    if spec.k < 1:
+        raise ValueError(f"SpecConfig.k must be >= 1, got {spec.k}")
+    if spec.drafter == "ngram":
+        return NgramDrafter(spec.k, max_ngram=spec.max_ngram,
+                            min_ngram=spec.min_ngram)
+    if spec.drafter == "draft_model":
+        cfg = spec.draft_cfg if spec.draft_cfg is not None else target_cfg
+        params = spec.draft_params if spec.draft_params is not None \
+            else target_params
+        if cfg is None or params is None:
+            raise ValueError("drafter='draft_model' needs draft_cfg/"
+                             "draft_params (or a target model to self-"
+                             "draft with)")
+        return DraftModelDrafter(cfg, params, spec.k, policy=policy)
+    raise ValueError(f"unknown drafter {spec.drafter!r}; "
+                     f"one of ('ngram', 'draft_model')")

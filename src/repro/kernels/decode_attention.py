@@ -30,36 +30,54 @@ from jax.experimental.pallas import tpu as pltpu
 DEFAULT_BLOCK_K = 256
 
 
-def _attend_block(q, k, v, mask, m_scr, l_scr, acc_scr, *, scale,
-                  attn_softcap, g):
-    """One online-softmax accumulation step shared by every decode
-    kernel: q (Hq, D) against a fp32 K/V tile (bk, Hkv, D[v]) under a
-    (bk,) bool mask, updating the (Hkv, g[, Dv]) VMEM scratch state."""
-    Hq, D = q.shape
-    bk, Hkv, _ = k.shape
-    qg = q.reshape(Hkv, g, D)
-    # (Hkv, g, D) x (bk, Hkv, D) -> (Hkv, g, bk)
+def _attend_block_mq(qg, k, v, mask, m_scr, l_scr, acc_scr, *, scale,
+                     attn_softcap):
+    """One online-softmax accumulation step shared by every decode /
+    verify kernel: ``nq`` query rows per kv head against one fp32 K/V
+    tile, each query under its own key mask (causal masking *inside* a
+    speculation window is per-query).
+
+    qg: (Hkv, nq, g, D); k/v: (bk, Hkv, D[v]); mask: (nq, bk) bool.
+    Scratch state is flattened over (nq, g): m/l (Hkv, nq*g) and acc
+    (Hkv, nq*g, Dv) — the single-query kernels are the nq == 1 case.
+    """
+    Hkv, nq, g, D = qg.shape
+    bk = k.shape[0]
+    q2 = qg.reshape(Hkv, nq * g, D)
+    # (Hkv, nq*g, D) x (bk, Hkv, D) -> (Hkv, nq*g, bk)
     logits = jax.lax.dot_general(
-        qg, k, (((2,), (2,)), ((0,), (1,))),
+        q2, k, (((2,), (2,)), ((0,), (1,))),
         preferred_element_type=jnp.float32) * scale
     if attn_softcap is not None:
         logits = jnp.tanh(logits / attn_softcap) * attn_softcap
-    logits = jnp.where(mask[None, None, :], logits, -jnp.inf)
+    mask4 = jnp.broadcast_to(mask[None, :, None, :], (Hkv, nq, g, bk)) \
+        .reshape(Hkv, nq * g, bk)
+    logits = jnp.where(mask4, logits, -jnp.inf)
 
-    m_prev = m_scr[...]                                    # (Hkv, g)
+    m_prev = m_scr[...]                                    # (Hkv, nq*g)
     m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
     m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
     alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
     p = jnp.exp(logits - m_safe[..., None])
-    p = jnp.where(mask[None, None, :], p, 0.0)
+    p = jnp.where(mask4, p, 0.0)
 
-    # (Hkv, g, bk) x (bk, Hkv, Dv) -> (Hkv, g, Dv)
+    # (Hkv, nq*g, bk) x (bk, Hkv, Dv) -> (Hkv, nq*g, Dv)
     pv = jax.lax.dot_general(
         p, v, (((2,), (0,)), ((0,), (1,))),
         preferred_element_type=jnp.float32)
     acc_scr[...] = acc_scr[...] * alpha[..., None] + pv
     l_scr[...] = l_scr[...] * alpha + p.sum(-1)
     m_scr[...] = m_new
+
+
+def _attend_block(q, k, v, mask, m_scr, l_scr, acc_scr, *, scale,
+                  attn_softcap, g):
+    """Single-query case: q (Hq, D) under one (bk,) key mask."""
+    Hq, D = q.shape
+    Hkv = k.shape[1]
+    _attend_block_mq(q.reshape(Hkv, 1, g, D), k, v, mask[None, :],
+                     m_scr, l_scr, acc_scr, scale=scale,
+                     attn_softcap=attn_softcap)
 
 
 def shape_supported(q, k, block_k: int = DEFAULT_BLOCK_K) -> bool:
@@ -288,6 +306,214 @@ def paged_decode_attention_q8(q, kpool, k_scale, vpool, v_scale, ppos,
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, 1, Hq, Dv), q.dtype),
+        interpret=interpret,
+    )(block_tables, q, kpool, k_scale, vpool, v_scale, ppos, q_pos)
+    return out
+
+
+def paged_verify_shape_supported(q, kpool, block_tables) -> bool:
+    B, Sq, Hq, D = q.shape
+    page, Hkv = kpool.shape[1], kpool.shape[2]
+    return (Sq >= 1 and Hq % Hkv == 0 and D % 8 == 0
+            and kpool.shape[3] % 8 == 0 and page % 8 == 0
+            and block_tables.shape[0] == B)
+
+
+def _mq_mask(kp, qp, allocated, window):
+    """(K1, page) per-query key mask for one streamed page tile: causal
+    against the stored absolute positions — which the verify forward has
+    just written for the drafted tokens too, so query j attends drafts
+    1..j-1 (causality *inside* the speculation window) for free."""
+    mask = (kp[None, :] <= qp[:, None]) & (kp >= 0)[None, :] & allocated
+    if window is not None:
+        mask &= kp[None, :] > (qp[:, None] - window)
+    return mask
+
+
+def _paged_verify_kernel(bt_ref, q_ref, k_ref, v_ref, kp_ref, qp_ref, o_ref,
+                         m_scr, l_scr, acc_scr, *, scale, attn_softcap,
+                         window, npages, g):
+    """Multi-query-per-slot variant of _paged_kernel: all K+1 query
+    positions of a slot's speculation window stream the slot's pages
+    ONCE (the block-table indirection and online-softmax scheme are
+    identical; scratch carries an extra query dim folded into g)."""
+    b, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                       # (K1, Hq, D)
+    k = k_ref[0].astype(jnp.float32)                       # (page, Hkv, D)
+    v = v_ref[0].astype(jnp.float32)                       # (page, Hkv, Dv)
+    kp = kp_ref[0]                                         # (page,)
+    qp = qp_ref[0]                                         # (K1,)
+    K1, Hq, D = q.shape
+    Hkv = k.shape[1]
+
+    mask = _mq_mask(kp, qp, bt_ref[b, j] >= 0, window)
+    qg = q.reshape(K1, Hkv, g, D).transpose(1, 0, 2, 3)    # (Hkv, K1, g, D)
+    _attend_block_mq(qg, k, v, mask, m_scr, l_scr, acc_scr, scale=scale,
+                     attn_softcap=attn_softcap)
+
+    @pl.when(j == npages - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-37)[..., None]
+        out = (acc_scr[...] / denom) \
+            .reshape(Hkv, K1, g, acc_scr.shape[-1]) \
+            .transpose(1, 0, 2, 3).reshape(K1, Hq, acc_scr.shape[-1])
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "scale",
+                                             "attn_softcap", "interpret"))
+def paged_verify_attention(q, kpool, vpool, ppos, block_tables, q_pos, *,
+                           window: Optional[int], scale: float,
+                           attn_softcap: Optional[float] = None,
+                           interpret: bool = False):
+    """Verify attention over a paged KV pool: K+1 query positions per
+    slot in one kernel pass (speculative decoding's draft-verify step).
+
+    Same contract as :func:`paged_decode_attention` with the query dim
+    widened: q (B, K1, Hq, D), q_pos (B, K1) absolute positions.  The
+    drafted tokens' K/V must already be in the pool (written by
+    ``kv_cache.paged_write_decode_multi``); stored positions make the
+    per-query causal mask exact inside the speculation window.
+    """
+    B, K1, Hq, D = q.shape
+    P, page, Hkv, Dv = vpool.shape
+    npages = block_tables.shape[1]
+    g = Hq // Hkv
+    dump = P - 1
+
+    def page_of(b, j, bt):
+        pid = bt[b, j]
+        return jnp.where(pid < 0, dump, pid)
+
+    kernel = functools.partial(_paged_verify_kernel, scale=scale,
+                               attn_softcap=attn_softcap, window=window,
+                               npages=npages, g=g)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, npages),
+        in_specs=[
+            pl.BlockSpec((1, K1, Hq, D), lambda b, j, bt: (b, 0, 0, 0)),
+            pl.BlockSpec((1, page, Hkv, D),
+                         lambda b, j, bt: (page_of(b, j, bt), 0, 0, 0)),
+            pl.BlockSpec((1, page, Hkv, Dv),
+                         lambda b, j, bt: (page_of(b, j, bt), 0, 0, 0)),
+            pl.BlockSpec((1, page),
+                         lambda b, j, bt: (page_of(b, j, bt), 0)),
+            pl.BlockSpec((1, K1), lambda b, j, bt: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, K1, Hq, Dv),
+                               lambda b, j, bt: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Hkv, K1 * g), jnp.float32),
+            pltpu.VMEM((Hkv, K1 * g), jnp.float32),
+            pltpu.VMEM((Hkv, K1 * g, Dv), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K1, Hq, Dv), q.dtype),
+        interpret=interpret,
+    )(block_tables, q, kpool, vpool, ppos, q_pos)
+    return out
+
+
+def _paged_verify_kernel_q8(bt_ref, q_ref, k_ref, ks_ref, v_ref, vs_ref,
+                            kp_ref, qp_ref, o_ref, m_scr, l_scr, acc_scr,
+                            *, scale, attn_softcap, window, npages, g):
+    """Quantized-pool verify kernel: int8 page tiles + per-entry scale
+    rows dequantized in-register (exactly _paged_kernel_q8's stream)
+    feeding the multi-query online-softmax body."""
+    b, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                       # (K1, Hq, D)
+    k = k_ref[0].astype(jnp.float32) \
+        * ks_ref[0].astype(jnp.float32)[..., None]         # (page, Hkv, D)
+    v = v_ref[0].astype(jnp.float32) \
+        * vs_ref[0].astype(jnp.float32)[..., None]         # (page, Hkv, Dv)
+    kp = kp_ref[0]
+    qp = qp_ref[0]
+    K1, Hq, D = q.shape
+    Hkv = k.shape[1]
+
+    mask = _mq_mask(kp, qp, bt_ref[b, j] >= 0, window)
+    qg = q.reshape(K1, Hkv, g, D).transpose(1, 0, 2, 3)
+    _attend_block_mq(qg, k, v, mask, m_scr, l_scr, acc_scr, scale=scale,
+                     attn_softcap=attn_softcap)
+
+    @pl.when(j == npages - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-37)[..., None]
+        out = (acc_scr[...] / denom) \
+            .reshape(Hkv, K1, g, acc_scr.shape[-1]) \
+            .transpose(1, 0, 2, 3).reshape(K1, Hq, acc_scr.shape[-1])
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "scale",
+                                             "attn_softcap", "interpret"))
+def paged_verify_attention_q8(q, kpool, k_scale, vpool, v_scale, ppos,
+                              block_tables, q_pos, *,
+                              window: Optional[int], scale: float,
+                              attn_softcap: Optional[float] = None,
+                              interpret: bool = False):
+    """:func:`paged_verify_attention` over an int8-quantized pool (same
+    scale-pool contract as :func:`paged_decode_attention_q8`)."""
+    B, K1, Hq, D = q.shape
+    P, page, Hkv, Dv = vpool.shape
+    npages = block_tables.shape[1]
+    g = Hq // Hkv
+    dump = P - 1
+
+    def page_of(b, j, bt):
+        pid = bt[b, j]
+        return jnp.where(pid < 0, dump, pid)
+
+    kernel = functools.partial(_paged_verify_kernel_q8, scale=scale,
+                               attn_softcap=attn_softcap, window=window,
+                               npages=npages, g=g)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, npages),
+        in_specs=[
+            pl.BlockSpec((1, K1, Hq, D), lambda b, j, bt: (b, 0, 0, 0)),
+            pl.BlockSpec((1, page, Hkv, D),
+                         lambda b, j, bt: (page_of(b, j, bt), 0, 0, 0)),
+            pl.BlockSpec((1, page, Hkv),
+                         lambda b, j, bt: (page_of(b, j, bt), 0, 0)),
+            pl.BlockSpec((1, page, Hkv, Dv),
+                         lambda b, j, bt: (page_of(b, j, bt), 0, 0, 0)),
+            pl.BlockSpec((1, page, Hkv),
+                         lambda b, j, bt: (page_of(b, j, bt), 0, 0)),
+            pl.BlockSpec((1, page),
+                         lambda b, j, bt: (page_of(b, j, bt), 0)),
+            pl.BlockSpec((1, K1), lambda b, j, bt: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, K1, Hq, Dv),
+                               lambda b, j, bt: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Hkv, K1 * g), jnp.float32),
+            pltpu.VMEM((Hkv, K1 * g), jnp.float32),
+            pltpu.VMEM((Hkv, K1 * g, Dv), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K1, Hq, Dv), q.dtype),
         interpret=interpret,
     )(block_tables, q, kpool, k_scale, vpool, v_scale, ppos, q_pos)
     return out

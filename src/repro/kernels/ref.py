@@ -63,6 +63,23 @@ def paged_decode_attention_ref(q, kpool, vpool, ppos, block_tables, q_pos, *,
                                 scale=scale, attn_softcap=attn_softcap)
 
 
+def paged_verify_attention_ref(q, kpool, vpool, ppos, block_tables, q_pos,
+                               *, window: Optional[int], scale: float,
+                               attn_softcap: Optional[float] = None,
+                               k_scale=None, v_scale=None):
+    """Oracle for the multi-query paged *verify* kernel (speculative
+    decoding): q (B, K1, Hq, D) query positions q_pos (B, K1) against the
+    slot's gathered pages.  Causal masking inside the speculation window
+    falls out of the stored absolute positions — the drafted tokens'
+    K/V are already in the pool when verify attends.  Shares the
+    dense-gather + flash reference with the single-query oracle (which
+    is the K1 == 1 case)."""
+    return paged_decode_attention_ref(
+        q, kpool, vpool, ppos, block_tables, q_pos, window=window,
+        scale=scale, attn_softcap=attn_softcap, k_scale=k_scale,
+        v_scale=v_scale)
+
+
 def rmsnorm_ref(x, w, eps: float = 1e-6):
     dt = x.dtype
     xf = x.astype(jnp.float32)

@@ -58,6 +58,15 @@ def main():
     ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
                     help="prepend one shared N-token system prompt to "
                          "every request (demonstrates the prefix cache)")
+    ap.add_argument("--spec", default="off",
+                    choices=["off", "ngram", "draft"],
+                    help="speculative decoding on the continuous path: "
+                         "ngram = prompt-lookup drafter (no weights), "
+                         "draft = draft-model drafter (self-drafting "
+                         "demo).  Distribution preserving; greedy "
+                         "streams are bit-identical to --spec off")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="drafted tokens per slot per verify step")
     ap.add_argument("--prune-coverage", type=float, default=None,
                     help="e.g. 0.999 -> prune vocab to that corpus coverage")
     ap.add_argument("--temperature", type=float, default=0.0)
@@ -99,10 +108,17 @@ def main():
                         max_new_tokens=args.max_new_tokens)
                 for i, t in enumerate(texts)]
         prefix = {"auto": None, "on": True, "off": False}[args.prefix_cache]
+        spec = None
+        if args.spec != "off":
+            from repro.core.speculative import SpecConfig
+            spec = SpecConfig(k=args.spec_k,
+                              drafter=("ngram" if args.spec == "ngram"
+                                       else "draft_model"))
         t0 = time.time()
         done, metrics = engine.serve_continuous(
             reqs, sp, page_size=args.page_size,
-            steps_per_sync=args.steps_per_sync, prefix_cache=prefix)
+            steps_per_sync=args.steps_per_sync, prefix_cache=prefix,
+            spec=spec)
         dt = time.time() - t0
         for r in done[:3]:
             print(f"[{r.uid}] {tok.decode(r.result or [])[:70]!r}")
@@ -123,6 +139,9 @@ def main():
             "kv_bytes_per_token": round(metrics.kv_bytes_per_token, 1),
             "peak_pages_in_use": metrics.peak_pages_in_use,
             "admission_stalls": metrics.admission_stalls,
+            "spec_mode": metrics.spec_mode,
+            "acceptance_rate": round(metrics.acceptance_rate, 3),
+            "tokens_per_forward": round(metrics.tokens_per_forward, 3),
             "mode": "continuous-paged"}))
         return
 

@@ -147,19 +147,27 @@ def mha_attention(q, k, v, q_pos, k_pos, *, window: Optional[int],
 def mha_attention_paged(q, pool, block_tables, q_pos, *,
                         window: Optional[int], scale: float,
                         attn_softcap: Optional[float] = None):
-    """Decode attention against a paged KV pool (continuous batching).
+    """Decode / verify attention against a paged KV pool (continuous
+    batching).
 
-    q: (B,1,Hq,D); pool: {"pk"/"pv": (P,page,Hkv,D), "ppos": (P,page)},
-    plus "pk_scale"/"pv_scale" (P,page,Hkv) when the pool stores int8;
+    q: (B,Sq,Hq,D) with Sq == 1 for single-token decode and Sq == K+1
+    for the speculative verify window (q_pos (B,Sq) absolute positions;
+    the window's own K/V must already be written to the pool, so the
+    stored positions make intra-window causal masking exact); pool:
+    {"pk"/"pv": (P,page,Hkv,D), "ppos": (P,page)}, plus
+    "pk_scale"/"pv_scale" (P,page,Hkv) when the pool stores int8;
     block_tables: (B, pages_per_slot) physical page ids (-1 = none).
 
-    Dispatch: paged Pallas kernel (gathers pages in-kernel via scalar-
-    prefetched block tables; int8 pools dequantize in-register) ->
-    dense gather (dequantizing) + reference attention.
+    Dispatch: paged Pallas kernel (single- or multi-query variant;
+    gathers pages in-kernel via scalar-prefetched block tables; int8
+    pools dequantize in-register) -> dense gather (dequantizing) +
+    reference attention.
     """
     from repro.core import kv_cache as KV
     from repro.kernels import ops as kops
-    out = kops.maybe_paged_decode_attention(
+    dispatch = (kops.maybe_paged_decode_attention if q.shape[1] == 1
+                else kops.maybe_paged_verify_attention)
+    out = dispatch(
         q, pool["pk"], pool["pv"], pool["ppos"], block_tables, q_pos,
         window=window, scale=scale, attn_softcap=attn_softcap,
         k_scale=pool.get("pk_scale"), v_scale=pool.get("pv_scale"))

@@ -160,6 +160,15 @@ def layer_apply(cfg: ModelConfig, spec: LayerSpec, p, x, *, positions,
     h = L.apply_norm(cfg, p["norm1"], x)
     new_cache = None
     is_paged = cache is not None and "pk" in cache
+    if mode == "verify" and (not is_paged or spec.mixer != ATTN):
+        # speculative verify is defined only over paged pure-attention
+        # layers (the same families prefix sharing supports): ring
+        # layers cannot roll back overwrites, recurrent/MLA state has no
+        # per-position rewind.  The engine gates before dispatch; this
+        # is the backstop.
+        raise NotImplementedError(
+            f"verify mode is unsupported for layer family '{spec.mixer}' "
+            f"/ dense caches")
 
     # ----- mixer ----------------------------------------------------------
     if spec.mixer in (ATTN, HYBRID):
@@ -176,6 +185,19 @@ def layer_apply(cfg: ModelConfig, spec: LayerSpec, p, x, *, positions,
                                      bt.shape[1])
             if mode == "decode":
                 c_attn = KV.paged_write_decode(
+                    pool, {"k": k, "v": v}, positions[:, 0], bt,
+                    paged.get("active"), ring_len=ring)
+                ctx = L.mha_attention_paged(
+                    q, c_attn, bt, positions, window=window, scale=scale,
+                    attn_softcap=cfg.attn_softcap)
+            elif mode == "verify":
+                # speculative window: write the pending + drafted tokens'
+                # K/V (positions[:, 0] .. positions[:, 0] + K), THEN
+                # attend — the stored positions give each of the K+1
+                # queries an exact causal mask over earlier drafts.
+                # Rejected entries are rewound by the engine afterwards
+                # (kv_cache.paged_truncate).
+                c_attn = KV.paged_write_decode_multi(
                     pool, {"k": k, "v": v}, positions[:, 0], bt,
                     paged.get("active"), ring_len=ring)
                 ctx = L.mha_attention_paged(
@@ -480,6 +502,40 @@ def forward_decode(params, cfg: ModelConfig, tokens, cache, lengths, *,
     x = _embed(cfg, params, tokens, None, positions, policy)
     x, cache, _ = _run_all(cfg, params, x, positions=positions,
                            cache_pos=None, cache=cache, mode="decode",
+                           max_len=max_len, paged=paged)
+    h_final = L.apply_norm(cfg, params["final_norm"], x)
+    logits = policy.output_cast(L.unembed(cfg, params, h_final))
+    return logits, cache
+
+
+def forward_verify(params, cfg: ModelConfig, tokens, cache, lengths, *,
+                   policy: Policy = FP32, max_len: Optional[int] = None,
+                   paged=None):
+    """Speculative verify: score a K+1-token window per slot in ONE
+    forward against the paged cache.
+
+    tokens: (B, K+1) — the pending token followed by K drafted tokens;
+    lengths: (B,) the pending token's absolute position (same convention
+    as :func:`forward_decode`, which is the K == 0 case).  Every layer
+    writes the whole window's K/V into its paged pool (masked by
+    ``paged["active"]``), and each query position attends causally via
+    the stored positions — including the window's own earlier tokens.
+    Returns (logits (B, K+1, V), cache); logits[:, j] is the target
+    distribution for the token following tokens[:, j], so the rejection
+    sampler (``sampling.speculative_verify``) reads acceptance straight
+    off this one pass.  The caller must rewind rejected entries
+    (``kv_cache.paged_truncate_all``) before the next step retires or
+    shares those pages.
+
+    Only paged pure-attention models support verify (see layer_apply's
+    gate) — the engine falls back to plain decode elsewhere.
+    """
+    B, K1 = tokens.shape
+    max_len = max_len or _cache_max_len(cfg, cache)
+    positions = lengths[:, None] + jnp.arange(K1)[None, :]
+    x = _embed(cfg, params, tokens, None, positions, policy)
+    x, cache, _ = _run_all(cfg, params, x, positions=positions,
+                           cache_pos=None, cache=cache, mode="verify",
                            max_len=max_len, paged=paged)
     h_final = L.apply_norm(cfg, params["final_norm"], x)
     logits = policy.output_cast(L.unembed(cfg, params, h_final))
