@@ -28,6 +28,13 @@ model self-drafting for the "draft" smoke), recording acceptance rate,
 tokens per forward, tokens/s — and greedy parity vs the non-speculative
 continuous run, which must be bit-exact.
 
+``--trace longprompt`` stresses the unified token-budget scheduler: one
+``--long-prompt-len`` prompt arrives while short requests decode.  The
+A/B leg serves it with chunked prefill OFF (whole-prompt admission — the
+prompt's forward stalls every decode slot) and ON (budgeted chunks
+interleaved with decode) and records TTFT / inter-token-latency
+percentiles each way; greedy outputs must be bit-identical.
+
 Results are also written as machine-readable JSON (--out, default
 ``BENCH_serving.json``) so the perf trajectory is tracked across PRs.
 
@@ -93,6 +100,86 @@ def build_shared_trace(n: int, seed: int, vocab: int, groups: int,
     return reqs
 
 
+def build_longprompt_trace(n_short: int, seed: int, vocab: int,
+                           long_len: int, max_new: int):
+    """Adversarial chunked-prefill trace: ``n_short`` short prompts
+    arrive at t=0 and decode steadily; ONE ``long_len``-token prompt
+    arrives mid-decode.  Without chunked prefill its whole-prompt
+    admission forward stalls every decoding slot at once — the
+    inter-token-latency p99 spike this PR's unified scheduler removes.
+    Returns (requests, arrivals)."""
+    rng = np.random.default_rng(seed)
+    reqs = [Request(uid=i,
+                    tokens=[2] + list(map(int, rng.integers(
+                        4, vocab, size=int(rng.integers(5, 12))))),
+                    max_new_tokens=max_new)
+            for i in range(n_short)]
+    reqs.append(Request(uid=n_short,
+                        tokens=[2] + list(map(int, rng.integers(
+                            4, vocab, size=long_len - 1))),
+                        max_new_tokens=max(4, max_new // 4)))
+    arrivals = [0.0] * n_short + [0.2]
+    return reqs, arrivals
+
+
+def run_longprompt_ab(args, engine_factory, trace, sp, arrivals):
+    """Serve the longprompt trace with chunking OFF (bucketed
+    whole-prompt admission) and ON (unified token-budget scheduler) and
+    record the inter-token-latency tail each way — plus greedy parity,
+    which must be bit-exact."""
+    from repro.core.engine import (DEFAULT_MAX_BATCHED_TOKENS,
+                                   mixed_width_buckets)
+    legs = {}
+    outs = {}
+    for name, on in (("chunked_off", False), ("chunked_on", True)):
+        eng = engine_factory()
+        run_continuous(eng, copy.deepcopy(trace), sp,       # warm compile
+                       page_size=args.page_size, num_pages=args.num_pages,
+                       steps_per_sync=args.steps_per_sync,
+                       max_batched_tokens=args.max_batched_tokens,
+                       chunked_prefill=on)
+        if on:
+            # chunk widths depend on how many slots were decoding when
+            # each chunk was cut — i.e. on arrival timing — so the trace
+            # warm-up above may miss width buckets the measured run
+            # hits.  Touch every mixed window width once (one lone
+            # request per bucket prefills as a single that-wide chunk)
+            # so the measured run never pays a mid-trace XLA compile.
+            budget = args.max_batched_tokens or DEFAULT_MAX_BATCHED_TOKENS
+            for i, w in enumerate(mixed_width_buckets(budget)):
+                if w > args.max_len - 4:
+                    break
+                # prefix matching must be off here: a warm request would
+                # otherwise match the previous warm's cached context and
+                # chunk only the suffix, skipping the width it exists
+                # to compile
+                eng.serve_continuous(
+                    [Request(uid=10_000 + i, tokens=[2] * w,
+                             max_new_tokens=2)],
+                    sp, page_size=args.page_size,
+                    num_pages=args.num_pages,
+                    steps_per_sync=args.steps_per_sync,
+                    max_batched_tokens=args.max_batched_tokens,
+                    chunked_prefill=True, prefix_cache=False)
+        eng.reset_prefix_cache()
+        reqs = copy.deepcopy(trace)
+        legs[name] = run_continuous(
+            eng, reqs, sp, page_size=args.page_size,
+            num_pages=args.num_pages, steps_per_sync=args.steps_per_sync,
+            arrivals=arrivals, max_batched_tokens=args.max_batched_tokens,
+            chunked_prefill=on)
+        outs[name] = [r.result for r in reqs]
+    off_p99, on_p99 = (legs["chunked_off"]["itl_p99_s"],
+                       legs["chunked_on"]["itl_p99_s"])
+    return {
+        **legs,
+        "itl_p99_improvement": round(off_p99 / on_p99, 3)
+        if on_p99 else float("nan"),
+        "outputs_identical_chunked_on_off":
+            outs["chunked_on"] == outs["chunked_off"],
+    }
+
+
 def run_bucket(engine: InferenceEngine, reqs, sp, arrivals=None) -> dict:
     """engine.serve semantics, instrumented per batch for latencies and
     padding accounting.  With ``arrivals``, requests join the batcher
@@ -155,13 +242,16 @@ def run_bucket(engine: InferenceEngine, reqs, sp, arrivals=None) -> dict:
 
 def run_continuous(engine: InferenceEngine, reqs, sp, *, page_size,
                    steps_per_sync, arrivals=None, prefix_cache=False,
-                   num_pages=None, spec=None) -> dict:
+                   num_pages=None, spec=None, max_batched_tokens=None,
+                   chunked_prefill=None) -> dict:
     t0 = time.perf_counter()
     _, m = engine.serve_continuous(reqs, sp, page_size=page_size,
                                    num_pages=num_pages,
                                    steps_per_sync=steps_per_sync,
                                    arrivals=arrivals,
-                                   prefix_cache=prefix_cache, spec=spec)
+                                   prefix_cache=prefix_cache, spec=spec,
+                                   max_batched_tokens=max_batched_tokens,
+                                   chunked_prefill=chunked_prefill)
     wall = time.perf_counter() - t0
     return {
         "wall_s": round(wall, 3),
@@ -169,6 +259,13 @@ def run_continuous(engine: InferenceEngine, reqs, sp, *, page_size,
         "tokens_per_s": round(m.generated_tokens / wall, 2),
         "p50_latency_s": round(m.percentile_latency(50), 3),
         "p99_latency_s": round(m.percentile_latency(99), 3),
+        "ttft_p50_s": round(m.ttft_p50, 4),
+        "ttft_p99_s": round(m.ttft_p99, 4),
+        "itl_p50_s": round(m.itl_p50, 4),
+        "itl_p99_s": round(m.itl_p99, 4),
+        "scheduler": m.scheduler,
+        "max_batched_tokens": m.max_batched_tokens,
+        "prefill_chunks": m.prefill_chunks,
         "prefill_pad_frac": round(m.prefill_pad_frac, 3),
         "decode_idle_frac": round(m.decode_idle_frac, 3),
         "prefill_tokens": m.prefill_tokens,
@@ -288,6 +385,13 @@ def main():
                          "; give the radix cache headroom to retain "
                          "prefixes by sizing above the slot minimum)")
     ap.add_argument("--steps-per-sync", type=int, default=8)
+    ap.add_argument("--max-batched-tokens", type=int, default=None,
+                    help="per-iteration token budget of the unified "
+                         "scheduler (decode + chunked-prefill tokens); "
+                         "default: engine default (256)")
+    ap.add_argument("--long-prompt-len", type=int, default=1024,
+                    help="prompt length of the adversarial request in "
+                         "--trace longprompt (max-len grows to fit)")
     ap.add_argument("--policy", default="fp32",
                     choices=["fp32", "bf16", "fp16"])
     ap.add_argument("--kv-dtype", default="auto",
@@ -315,9 +419,13 @@ def main():
     ap.add_argument("--poisson", type=float, default=None,
                     help="arrival rate (req/s) for an open-loop trace; "
                          "default: all requests arrive at t=0")
-    ap.add_argument("--trace", default="mixed", choices=["mixed", "shared"],
+    ap.add_argument("--trace", default="mixed",
+                    choices=["mixed", "shared", "longprompt"],
                     help="mixed: lognormal lengths; shared: N requests "
-                         "over --prefix-groups shared system prompts")
+                         "over --prefix-groups shared system prompts; "
+                         "longprompt: one --long-prompt-len prompt "
+                         "arriving mid-decode (chunked-prefill A/B: ITL "
+                         "p99 with the unified scheduler on vs off)")
     ap.add_argument("--prefix-groups", type=int, default=8)
     ap.add_argument("--prefix-len", type=int, default=64)
     ap.add_argument("--suffix-max", type=int, default=12)
@@ -347,12 +455,21 @@ def main():
             min(args.prefix_len, args.max_len - args.max_new_tokens
                 - args.suffix_max),
             args.suffix_max, args.max_new_tokens)
+    elif args.trace == "longprompt":
+        # context must hold the adversarial prompt plus its budget
+        args.max_len = max(args.max_len,
+                           args.long_prompt_len + args.max_new_tokens)
+        trace, lp_arrivals = build_longprompt_trace(
+            args.requests, args.seed, vocab, args.long_prompt_len,
+            args.max_new_tokens)
     else:
         trace = build_trace(args.requests, args.seed, vocab,
                             args.max_len - args.max_new_tokens,
                             args.max_new_tokens)
     arrivals = None
-    if args.poisson:
+    if args.trace == "longprompt":
+        arrivals = lp_arrivals
+    elif args.poisson:
         rng = np.random.default_rng(args.seed + 1)
         arrivals = list(np.cumsum(
             rng.exponential(1.0 / args.poisson, size=len(trace))))
@@ -403,6 +520,9 @@ def main():
         - pfx["prefill_tokens"],
         "outputs_identical_prefix_on_off": identical,
     }
+    if args.trace == "longprompt":
+        report["longprompt"] = run_longprompt_ab(args, fresh_engine, trace,
+                                                 sp, arrivals)
     if args.spec != "off":
         leg = run_spec_leg(args, fresh_engine, trace, sp, arrivals,
                            cont_reqs)

@@ -12,10 +12,20 @@ a common prompt prefix through :class:`~repro.core.prefix_cache.
 RadixPrefixCache` (a shared page is never written; copy-on-write hands
 the writer a fresh copy of a partial tail page).
 
+Scheduling is a **unified token-budget iteration** (chunked prefill):
+each step, :meth:`ContinuousScheduler.next_batch` packs one decode token
+per live slot plus up to the remaining ``max_batched_tokens`` in
+prefill-chunk tokens from admitting slots (FCFS), so a long prompt
+prefills in budget-bounded chunks interleaved with decode instead of
+stalling every slot for its whole forward.  Layer families that cannot
+expose per-position paged history (ring/recurrent/MLA — the prefix
+sharing opt-outs) fall back to bucketed whole-prompt admission.
+
 This module is host-side bookkeeping only (allocator, slot states, trace
 metrics); the device side lives in ``engine.serve_continuous`` (jitted
-admit + fused multi-token decode step) and ``kernels/decode_attention``
-(paged kernel).
+mixed step + fused multi-token decode scan) and
+``kernels/decode_attention`` (paged single-query and mixed multi-query
+kernels).
 """
 from __future__ import annotations
 
@@ -120,6 +130,42 @@ class SlotState:
     submitted_at: float = 0.0          # queued (arrival) time
     admitted_at: float = 0.0
     finished_at: Optional[float] = None
+    # -- chunked prefill progress (unified token-budget scheduler) ----------
+    prefill_pos: int = 0               # prompt tokens written so far (abs;
+    #                                    starts at matched_len; == prompt_len
+    #                                    once the slot is decoding)
+    admit_seq: int = 0                 # FCFS tiebreak for prefill chunks
+    needs_init: bool = True            # fresh pages not yet reset / COW'd
+    last_token_at: Optional[float] = None   # wall time of last emit (ITL)
+
+    @property
+    def prefill_done(self) -> bool:
+        return self.prefill_pos >= self.request.prompt_len
+
+
+@dataclass
+class ChunkPlan:
+    """One prefill chunk scheduled into a mixed iteration: ``length``
+    prompt tokens of ``slot``'s request starting at absolute prompt
+    position ``start`` (chunk boundaries need not align to pages)."""
+    slot: int
+    start: int
+    length: int
+
+
+@dataclass
+class MixedPlan:
+    """One token-budget iteration: every decoding slot contributes
+    ``decode_cost`` tokens, admitting slots share the remainder as
+    prefill chunks (FCFS)."""
+    decode_slots: List[int]
+    chunks: List[ChunkPlan]
+    decode_cost: int = 1
+
+    @property
+    def total_tokens(self) -> int:
+        return (self.decode_cost * len(self.decode_slots)
+                + sum(c.length for c in self.chunks))
 
 
 @dataclass
@@ -155,6 +201,12 @@ class ServeMetrics:
     accepted_tokens: int = 0         # drafts kept by the rejection sampler
     decode_tokens: int = 0           # tokens emitted by decode/verify steps
     #   (generated_tokens minus the one-per-request admission sample)
+    # -- unified token-budget scheduler (chunked prefill) -------------------
+    scheduler: str = "bucketed"      # "unified" (token budget) | "bucketed"
+    max_batched_tokens: int = 0      # per-iteration token budget (0 = n/a)
+    prefill_chunks: int = 0          # prefill chunk rows scheduled
+    ttft_s: List[float] = field(default_factory=list)   # submit->first tok
+    itl_s: List[float] = field(default_factory=list)    # inter-token gaps
 
     @property
     def decode_idle_frac(self) -> float:
@@ -196,6 +248,34 @@ class ServeMetrics:
         return float(np.percentile(self.latency_s, q)) if self.latency_s \
             else 0.0
 
+    def percentile_ttft(self, q: float) -> float:
+        """Time-to-first-token percentile (submission -> first emitted
+        token); 0 for zero-token runs."""
+        return float(np.percentile(self.ttft_s, q)) if self.ttft_s else 0.0
+
+    def percentile_itl(self, q: float) -> float:
+        """Inter-token-latency percentile over every emitted token after
+        a slot's first (multi-token syncs spread their wall time evenly
+        across the tokens they emitted); 0 for runs that never decoded
+        past a first token."""
+        return float(np.percentile(self.itl_s, q)) if self.itl_s else 0.0
+
+    @property
+    def ttft_p50(self) -> float:
+        return self.percentile_ttft(50)
+
+    @property
+    def ttft_p99(self) -> float:
+        return self.percentile_ttft(99)
+
+    @property
+    def itl_p50(self) -> float:
+        return self.percentile_itl(50)
+
+    @property
+    def itl_p99(self) -> float:
+        return self.percentile_itl(99)
+
 
 class ContinuousScheduler:
     """FCFS admission control over decode slots + the refcounted page pool.
@@ -222,6 +302,7 @@ class ContinuousScheduler:
         self.waiting: List[Request] = []
         self.slots: Dict[int, SlotState] = {}      # slot idx -> state
         self._submit_t: Dict[int, float] = {}      # uid -> queued time
+        self._admit_seq = 0                        # FCFS chunk ordering
 
     # -- queue --------------------------------------------------------------
     def submit(self, req: Request, now: float = 0.0) -> None:
@@ -291,10 +372,43 @@ class ContinuousScheduler:
                        fresh_pages=fresh, matched_len=matched,
                        shared_count=shared, cow_src=cow_src,
                        admitted_at=now,
-                       submitted_at=self._submit_t.get(req.uid, 0.0))
+                       submitted_at=self._submit_t.get(req.uid, 0.0),
+                       prefill_pos=matched, admit_seq=self._admit_seq)
+        self._admit_seq += 1
         req.prefix_tokens_matched = matched
         self.slots[slot] = st
         return slot, st
+
+    # -- unified token-budget iteration planning ----------------------------
+    def next_batch(self, budget: int, decode_cost: int = 1) -> MixedPlan:
+        """Plan one mixed iteration under ``budget`` total tokens.
+
+        Decode comes first: every decoding slot (prefill complete)
+        contributes ``decode_cost`` tokens — inter-token latency is what
+        the budget protects.  The remainder is dealt to admitting slots
+        as prefill chunks in admission (FCFS) order, each chunk
+        ``min(remaining prompt, remaining budget)`` tokens, so the
+        oldest admitting slot always advances first and no slot starves:
+        an admitting slot occupies a decode slot itself, so with
+        ``budget >= max_slots * decode_cost`` at least one chunk token
+        is always schedulable whenever any slot is admitting.
+        """
+        decode = [s for s in sorted(self.slots)
+                  if self.slots[s].prefill_done]
+        admitting = sorted((s for s in self.slots
+                            if not self.slots[s].prefill_done),
+                           key=lambda s: self.slots[s].admit_seq)
+        rem = budget - decode_cost * len(decode)
+        chunks: List[ChunkPlan] = []
+        for s in admitting:
+            if rem <= 0:
+                break
+            st = self.slots[s]
+            c = min(st.request.prompt_len - st.prefill_pos, rem)
+            chunks.append(ChunkPlan(slot=s, start=st.prefill_pos, length=c))
+            rem -= c
+        return MixedPlan(decode_slots=decode, chunks=chunks,
+                         decode_cost=decode_cost)
 
     def release_cow_source(self, st: SlotState) -> None:
         """Drop the pin on the COW source page once the engine has copied

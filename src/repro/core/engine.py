@@ -37,6 +37,24 @@ from repro.core.tokenizer import EOS
 from repro.models import transformer as T
 
 
+# Default per-iteration token budget of the unified scheduler: decode
+# tokens from every live slot plus prefill-chunk tokens from admitting
+# slots must fit under it, so a long prompt can never monopolize a step.
+DEFAULT_MAX_BATCHED_TOKENS = 256
+
+
+def mixed_width_buckets(budget: int) -> tuple:
+    """Padded window widths the unified scheduler's mixed forwards are
+    traced at: per-iteration chunk widths bucket up into this set, so
+    the compiled-shape count stays bounded no matter how scheduling
+    timing slices the prompts; the budget itself caps the set.  Exposed
+    so benches can pre-warm every width (a chunk's width depends on how
+    many slots were decoding when it was scheduled — i.e. on arrival
+    timing — so a measured run may otherwise hit an uncompiled shape)."""
+    return tuple(w for w in (8, 16, 32, 64, 128, 256, 512, 1024, 2048,
+                             4096) if w < budget) + (budget,)
+
+
 @dataclass
 class EngineStats:
     prefill_s: float = 0.0
@@ -353,8 +371,11 @@ class InferenceEngine:
         return self._paged_ctx
 
     def _continuous_fns(self, sp: SamplingParams, steps_per_sync: int):
-        """Build (once per (sp, steps) combo) the two jitted entry points
-        of the continuous path:
+        """Build (once per (sp, steps) combo) the jitted entry points of
+        the continuous path.  ``step`` drives every decode-only sync;
+        the admit functions are the *bucketed fallback* for layer
+        families the unified chunked scheduler cannot serve (ring /
+        recurrent / MLA state — see ``serve_continuous``):
 
         * admit: bucket-padded prefill of a batch of same-bucket requests
           that scatters K/V straight into their freshly allocated pool
@@ -444,6 +465,41 @@ class InferenceEngine:
         self._cont_cache[key] = fns
         return fns
 
+    def _mixed_fns(self, sp: SamplingParams):
+        """Build (once per sp) the chunk entry point of the unified
+        iteration: one jitted dispatch per scheduled prefill chunk.
+        Fresh pages of a slot running its first chunk are reset and its
+        partial COW tail page copied in the same call (dump-page no-ops
+        otherwise), then the chunk window is scattered into the paged
+        pool and attended in a single mixed forward
+        (``T.forward_mixed``), and the row's last-token logits are
+        sampled on device (consumed only by a prompt's final chunk).
+        Retraced once per padded window-width bucket, so the
+        compiled-shape set stays small regardless of scheduling timing
+        — this replaces the per-(B, bucket) power-of-two
+        admission-chunk machinery on chunked families.
+        """
+        key = ("mixed", sp)
+        cached = self._cont_cache.get(key)
+        if cached is not None:
+            return cached
+        cfg, policy, max_len = self.cfg, self.policy, self.max_len
+
+        def mixed_fn(params, tokens, row_start, n_q, block_tables,
+                     reset_rows, cow_src, cow_dst, cow_keep, cache, rng):
+            cache = KV.reset_pages_all(cache, reset_rows)
+            cache = KV.copy_pages_all(cache, cow_src, cow_dst, cow_keep)
+            logits, cache = T.forward_mixed(
+                params, cfg, tokens, cache, row_start, n_q, policy=policy,
+                max_len=max_len, paged={"block_tables": block_tables})
+            rng, sub = jax.random.split(rng)
+            nxt = sample(logits[:, 0], sub, sp)
+            return nxt, cache, rng
+
+        fn = jax.jit(mixed_fn, donate_argnums=(9,) if self._donate else ())
+        self._cont_cache[key] = fn
+        return fn
+
     def _spec_fns(self, sp: SamplingParams, k: int):
         """Build (once per (sp, k)) the jitted draft-verify decode step:
         ONE target forward scores the pending token plus ``k`` drafted
@@ -518,7 +574,9 @@ class InferenceEngine:
                          steps_per_sync: int = 4,
                          arrivals: Optional[List[float]] = None,
                          prefix_cache: Optional[bool] = None,
-                         spec: Optional[SpecConfig] = None):
+                         spec: Optional[SpecConfig] = None,
+                         max_batched_tokens: Optional[int] = None,
+                         chunked_prefill: Optional[bool] = None):
         """Serve requests with continuous batching over a paged KV cache.
 
         Unlike :meth:`serve` (sort -> bucket -> drain), decode slots are
@@ -527,6 +585,38 @@ class InferenceEngine:
         is retired at EOS — other slots never wait for it.  KV lives in
         ``num_pages`` refcounted shared pages; per-request pages are
         allocated at admission and released at retirement.
+
+        chunked_prefill / max_batched_tokens: the unified token-budget
+        scheduler.  Instead of dispatching each admitted prompt as one
+        whole-prompt prefill (which stalls every decoding slot for the
+        prompt's full forward), each iteration packs one decode token
+        per live slot plus up to the remaining budget in prefill-chunk
+        tokens from admitting slots (FCFS) — executed as one fused
+        decode dispatch plus packed per-chunk mixed forwards, so
+        iteration compute tracks the budget's real token count and
+        prompts prefill in budget-bounded chunks interleaved with
+        decode, bounding inter-token latency.  With speculation, the
+        budget also covers the verify step (the largest iteration:
+        k+1 tokens per slot); iterations that carry prefill chunks
+        pause drafting and charge one decode token per slot.  ``chunked_prefill=None``
+        (default) enables it for the layer families that support it
+        (paged pure non-windowed attention — the prefix-sharing gate;
+        chunk attention needs per-position paged history, which
+        ring/recurrent/MLA state does not expose), falling back to
+        bucketed whole-prompt admission elsewhere; True warns and falls
+        back on unsupported families; False forces the bucketed path.
+        ``max_batched_tokens`` (default 256) is clamped up to one token
+        per slot (k+1 under speculation) so decode can always step.
+        Decode-only iterations still fuse ``steps_per_sync`` steps into
+        one dispatch.  Greedy outputs are bit-identical chunked or not;
+        pool dtypes narrower than the compute dtype (int8 aside, which
+        always round-trips the pool) may flip near-tie greedy picks
+        because chunk queries attend the written pool bytes.
+
+        Requests that arrive faster than slots/pages free up queue FCFS,
+        exactly as before — the budget only reshapes *how* an admitted
+        prompt's prefill is scheduled.
+
 
         prefix_cache: share identical prompt-prefix pages across requests
         through a radix trie (copy-on-write; zero prefill cost for the
@@ -588,6 +678,30 @@ class InferenceEngine:
                                       policy=self.policy)
                 self._cont_cache["drafter"] = (spec, drafter)
             verify_fn = self._spec_fns(sp, drafter.k)
+        # -- unified token-budget scheduler (chunked prefill) --------------
+        # same family gate as prefix sharing: chunk queries attend the
+        # already-written paged history, which ring/recurrent/MLA state
+        # cannot expose; opted-out families keep bucketed admission.
+        chunked = share_reason is None if chunked_prefill is None \
+            else bool(chunked_prefill)
+        if chunked and share_reason is not None:
+            warnings.warn(f"chunked prefill requested but disabled — "
+                          f"{share_reason}")
+            chunked = False
+        budget = max_batched_tokens or DEFAULT_MAX_BATCHED_TOKENS
+        floor = slots * ((drafter.k + 1) if spec_on else 1)
+        if chunked and budget < floor:
+            warnings.warn(
+                f"max_batched_tokens={budget} cannot cover one "
+                f"{'verify window' if spec_on else 'decode token'} per "
+                f"slot; raising to {floor}")
+            budget = floor
+        mixed_fn = self._mixed_fns(sp) if chunked else None
+        # the decode share of a mixed iteration is a single fused step
+        step_fn1 = self._continuous_fns(sp, 1)[2] if chunked else None
+        # mixed forwards are traced per padded window width; bucket the
+        # width so the compiled-shape set stays small and deterministic
+        width_buckets = mixed_width_buckets(budget)
         admit_fn, admit_prefix_fn, step_fn = \
             self._continuous_fns(sp, steps_per_sync)
         buckets = self.prompt_buckets()
@@ -609,7 +723,10 @@ class InferenceEngine:
                                kv_pool_bytes=ctx["kv_pool_bytes"],
                                kv_bytes_per_token=ctx["kv_bytes_per_token"],
                                spec_mode=drafter.name if spec_on else "off",
-                               spec_k=drafter.k if spec_on else 0)
+                               spec_k=drafter.k if spec_on else 0,
+                               scheduler="unified" if chunked
+                               else "bucketed",
+                               max_batched_tokens=budget if chunked else 0)
         stats = EngineStats(batches=1)
         trie_base = trie.evicted_pages
 
@@ -639,6 +756,142 @@ class InferenceEngine:
             # queue wait counts: latency is submission -> completion
             metrics.latency_s.append(st.finished_at - st.submitted_at)
 
+        def record_emit(st, n, t):
+            """TTFT / ITL bookkeeping: ``n`` tokens appended to ``st`` at
+            wall time ``t``.  A multi-token sync (fused decode scan,
+            accepted speculation window) spreads its wall time evenly
+            over the tokens it emitted — per-token arrival inside one
+            dispatch is unobservable."""
+            if n <= 0:
+                return
+            if st.last_token_at is None:
+                # a slot's first emission is always the single admission /
+                # final-chunk sample: it defines TTFT and no ITL gap
+                assert n == 1, "first emission must be a single token"
+                metrics.ttft_s.append(t - st.submitted_at)
+            else:
+                metrics.itl_s.extend([(t - st.last_token_at) / n] * n)
+            st.last_token_at = t
+
+        def apply_decode_results(tok_d, lens_d, rem_d, act_d, emits):
+            """Fold a decode/verify dispatch's device results back into
+            the host slot arrays: append emits, record TTFT/ITL, retire
+            finished slots."""
+            nonlocal tok, lens, rem, act
+            tok, lens, rem = (np.array(tok_d), np.array(lens_d),
+                              np.array(rem_d))
+            act_new = np.array(act_d)
+            metrics.decode_tokens += int((emits >= 0).sum())
+            t_now = now()
+            for slot in list(sched.slots):
+                st = sched.slots[slot]
+                if not st.prefill_done:
+                    continue        # admitting slot rode along inactive
+                n_emit = 0
+                for t in emits[slot]:
+                    if t >= 0:
+                        st.emitted.append(int(t))
+                        n_emit += 1
+                record_emit(st, n_emit, t_now)
+                if not act_new[slot]:
+                    retire(slot)
+            act = act_new
+
+        def decode_micro_step():
+            """One 1-token decode dispatch over every live slot — the
+            decode share of a mixed iteration (each decoding slot's
+            budget cost is exactly one token, so admitting prompts can
+            never starve decode)."""
+            nonlocal cache, rng
+            td = time.perf_counter()
+            (tok_d, lens_d, rem_d, act_d, cache, rng, emits,
+             acts) = step_fn1(self.params, jnp.asarray(tok),
+                              jnp.asarray(lens), jnp.asarray(rem),
+                              jnp.asarray(act),
+                              jnp.asarray(block_tables), cache, rng)
+            emits = np.asarray(jax.block_until_ready(emits))
+            stats.decode_s += time.perf_counter() - td
+            metrics.steps += 1
+            metrics.slot_steps_total += slots
+            metrics.slot_steps_active += int(np.asarray(acts).sum())
+            apply_decode_results(tok_d, lens_d, rem_d, act_d, emits)
+
+        def run_chunks(plan):
+            """The prefill share of a mixed iteration: each scheduled
+            chunk runs as one packed single-row mixed forward (page
+            reset + COW copy fused into the slot's first chunk), so an
+            iteration's prefill compute tracks the budget's *real*
+            token count — decode rows never pad chunk-wide, chunk rows
+            never pad slot-deep.  Chunk dispatches are (1, W-bucket)
+            shaped: a small deterministic trace set regardless of how
+            arrival timing slices the prompts."""
+            nonlocal cache, rng
+            for c in plan.chunks:
+                st = sched.slots[c.slot]
+                req = st.request
+                W = pick_bucket(c.length, width_buckets)
+                toks = np.zeros((1, W), np.int32)
+                toks[0, :c.length] = req.tokens[c.start:c.start + c.length]
+                reset_row = np.full((1, pages_per_slot), dump, np.int32)
+                cow_src = np.full((1,), dump, np.int32)
+                cow_dst = np.full((1,), dump, np.int32)
+                cow_keep = np.zeros((1,), np.int32)
+                if st.needs_init:
+                    reset_row[0, :len(st.fresh_pages)] = st.fresh_pages
+                    if st.cow_src >= 0:
+                        # COW invariant: the destination must be private
+                        if sched.allocator.refcount(st.fresh_pages[0]) != 1:
+                            raise AssertionError(
+                                "COW write target is a shared page")
+                        cow_src[0] = st.cow_src
+                        cow_dst[0] = st.fresh_pages[0]
+                        cow_keep[0] = st.matched_len
+                        metrics.cow_copies += 1
+                tm0 = time.perf_counter()
+                nxt, cache, rng = mixed_fn(
+                    self.params, jnp.asarray(toks),
+                    jnp.asarray([c.start], jnp.int32),
+                    jnp.asarray([c.length], jnp.int32),
+                    jnp.asarray(block_tables[c.slot:c.slot + 1]),
+                    jnp.asarray(reset_row), jnp.asarray(cow_src),
+                    jnp.asarray(cow_dst), jnp.asarray(cow_keep), cache,
+                    rng)
+                # only a prompt's FINAL chunk consumes its sampled token;
+                # mid-prompt chunks stay async (no host sync), so the
+                # dispatch pipeline keeps flowing — prefill_s then books
+                # a mid-prompt chunk's device time against whichever
+                # later dispatch blocks on it
+                if c.start + c.length >= req.prompt_len:
+                    nxt = np.asarray(jax.block_until_ready(nxt))
+                stats.prefill_s += time.perf_counter() - tm0
+                metrics.prefill_chunks += 1
+                metrics.prefill_tokens += c.length
+                metrics.prefill_padded += W
+                if st.needs_init:
+                    st.needs_init = False
+                    sched.release_cow_source(st)
+                st.prefill_pos = c.start + c.length
+                if not st.prefill_done:
+                    continue
+                # final chunk: its last-token logits seeded sampling
+                plen = req.prompt_len
+                # newly produced page-aligned prompt KV joins the trie
+                # now (the partial tail joins at retire, once decode can
+                # no longer write into it)
+                sched.insert_prefix(st, (plen // page_size) * page_size)
+                first = int(nxt[0])
+                gen_budget = min(req.max_new_tokens, self.max_len - plen)
+                if first != EOS and gen_budget > 0:
+                    st.emitted.append(first)
+                    record_emit(st, 1, now())
+                if first == EOS or gen_budget <= 1:
+                    retire(c.slot)
+                else:
+                    tok[c.slot] = first
+                    lens[c.slot] = plen
+                    rem[c.slot] = gen_budget - 1
+                    act[c.slot] = True
+
         while incoming or sched.has_work():
             # -- release arrived requests into the FCFS queue -------------
             while incoming and incoming[0][0] <= now():
@@ -658,9 +911,29 @@ class InferenceEngine:
                 sched.submit(req, now())
 
             # -- admit into free slots ------------------------------------
-            # consecutive FCFS admissions sharing a prompt bucket run as
-            # ONE batched prefill dispatch (per-request prefills would
-            # serialize 1-row model calls against the decode loop)
+            if chunked:
+                # unified scheduler: admission only CLAIMS a slot and its
+                # pages; the prompt is prefilled in budgeted chunks by
+                # the mixed iterations below, interleaved with decode
+                while True:
+                    adm = sched.try_admit(now())
+                    if adm is None:
+                        break
+                    slot, st = adm
+                    block_tables[slot, :] = -1
+                    block_tables[slot, :len(st.pages)] = st.pages
+                    stats.prompt_tokens += st.request.prompt_len
+                    metrics.admitted += 1
+                    metrics.prefix_hits += st.matched_len > 0
+                    metrics.prefix_matched_tokens += st.matched_len
+                    metrics.pages_shared += st.shared_count
+                metrics.peak_pages_in_use = max(
+                    metrics.peak_pages_in_use,
+                    sched.allocator.allocated_count)
+            # bucketed fallback: consecutive FCFS admissions sharing a
+            # prompt bucket run as ONE batched whole-prompt prefill
+            # dispatch (per-request prefills would serialize 1-row model
+            # calls against the decode loop)
             pending_adm: List[tuple] = []      # [(slot, SlotState, bucket)]
 
             def flush_admissions():
@@ -721,10 +994,13 @@ class InferenceEngine:
                         jnp.asarray(pages_arr), cache, rng)
                 first = np.asarray(jax.block_until_ready(first))
                 stats.prefill_s += time.perf_counter() - tp0
+                t_adm = now()
                 for i, (slot, st, _) in enumerate(chunk):
                     req = st.request
                     plen = req.prompt_len
                     sched.release_cow_source(st)
+                    st.needs_init = False
+                    st.prefill_pos = plen        # whole prompt in one go
                     stats.prompt_tokens += plen
                     metrics.admitted += 1
                     metrics.prefill_tokens += plen - st.matched_len
@@ -739,6 +1015,7 @@ class InferenceEngine:
                     budget = min(req.max_new_tokens, self.max_len - plen)
                     if first[i] != EOS and budget > 0:
                         st.emitted.append(int(first[i]))
+                        record_emit(st, 1, t_adm)
                     if first[i] == EOS or budget <= 1:
                         retire(slot)
                     else:
@@ -747,7 +1024,7 @@ class InferenceEngine:
                         rem[slot] = budget - 1
                         act[slot] = True
 
-            while True:                # flush may retire (budget 0/1, EOS
+            while not chunked:         # flush may retire (budget 0/1, EOS
                 progress = False       # at admit) and free slots: retry
                 while True:
                     adm = sched.try_admit(now())
@@ -793,6 +1070,20 @@ class InferenceEngine:
                     time.sleep(max(0.0, min(incoming[0][0] - now(), 0.01)))
                 continue
 
+            # -- unified token-budget iteration ----------------------------
+            # any admitting slot -> one mixed iteration: every decoding
+            # slot advances one token (single fused dispatch), then the
+            # FCFS prefill chunks run packed (budget-bounded compute).
+            # Pure-decode iterations fall through to the fused
+            # steps_per_sync scan below.
+            if chunked:
+                plan = sched.next_batch(budget)
+                if plan.chunks:
+                    if plan.decode_slots:
+                        decode_micro_step()
+                    run_chunks(plan)
+                    continue
+
             # -- fused decode steps ---------------------------------------
             td0 = time.perf_counter()
             if spec_on:
@@ -830,17 +1121,7 @@ class InferenceEngine:
                 metrics.steps += steps_per_sync
                 metrics.slot_steps_total += slots * steps_per_sync
                 metrics.slot_steps_active += int(acts.sum())
-            tok, lens, rem = (np.array(tok_d), np.array(lens_d),
-                              np.array(rem_d))
-            act_new = np.array(act_d)
-            metrics.decode_tokens += int((emits >= 0).sum())
-            for slot in list(sched.slots):
-                for t in emits[slot]:
-                    if t >= 0:
-                        sched.slots[slot].emitted.append(int(t))
-                if not act_new[slot]:
-                    retire(slot)
-            act = act_new
+            apply_decode_results(tok_d, lens_d, rem_d, act_d, emits)
 
         self.rng = rng
         ctx["cache"] = cache           # pool persists across serve calls

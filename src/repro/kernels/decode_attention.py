@@ -311,7 +311,7 @@ def paged_decode_attention_q8(q, kpool, k_scale, vpool, v_scale, ppos,
     return out
 
 
-def paged_verify_shape_supported(q, kpool, block_tables) -> bool:
+def paged_mixed_shape_supported(q, kpool, block_tables) -> bool:
     B, Sq, Hq, D = q.shape
     page, Hkv = kpool.shape[1], kpool.shape[2]
     return (Sq >= 1 and Hq % Hkv == 0 and D % 8 == 0
@@ -319,23 +319,31 @@ def paged_verify_shape_supported(q, kpool, block_tables) -> bool:
             and block_tables.shape[0] == B)
 
 
+# verify is the all-rows-full special case of the mixed entry below
+paged_verify_shape_supported = paged_mixed_shape_supported
+
+
 def _mq_mask(kp, qp, allocated, window):
-    """(K1, page) per-query key mask for one streamed page tile: causal
-    against the stored absolute positions — which the verify forward has
-    just written for the drafted tokens too, so query j attends drafts
-    1..j-1 (causality *inside* the speculation window) for free."""
+    """(W, page) per-query key mask for one streamed page tile: causal
+    against the stored absolute positions — which the mixed/verify
+    forward has just written for the window's own tokens too, so query j
+    attends tokens 1..j-1 of its window (causality *inside* a prefill
+    chunk or speculation window) for free.  A padding query carries
+    qp == -1: no key satisfies ``kp <= -1 & kp >= 0``, so its row is
+    fully masked and the kernel's zero-denominator guard emits zeros."""
     mask = (kp[None, :] <= qp[:, None]) & (kp >= 0)[None, :] & allocated
     if window is not None:
         mask &= kp[None, :] > (qp[:, None] - window)
     return mask
 
 
-def _paged_verify_kernel(bt_ref, q_ref, k_ref, v_ref, kp_ref, qp_ref, o_ref,
-                         m_scr, l_scr, acc_scr, *, scale, attn_softcap,
-                         window, npages, g):
-    """Multi-query-per-slot variant of _paged_kernel: all K+1 query
-    positions of a slot's speculation window stream the slot's pages
-    ONCE (the block-table indirection and online-softmax scheme are
+def _paged_mixed_kernel(bt_ref, q_ref, k_ref, v_ref, kp_ref, qp_ref, o_ref,
+                        m_scr, l_scr, acc_scr, *, scale, attn_softcap,
+                        window, npages, g):
+    """Multi-query-per-slot variant of _paged_kernel: all W query
+    positions of a slot's window (prefill chunk, speculation window, or
+    a single decode token plus padding) stream the slot's pages ONCE
+    (the block-table indirection and online-softmax scheme are
     identical; scratch carries an extra query dim folded into g)."""
     b, j = pl.program_id(0), pl.program_id(1)
 
@@ -369,18 +377,22 @@ def _paged_verify_kernel(bt_ref, q_ref, k_ref, v_ref, kp_ref, qp_ref, o_ref,
 
 @functools.partial(jax.jit, static_argnames=("window", "scale",
                                              "attn_softcap", "interpret"))
-def paged_verify_attention(q, kpool, vpool, ppos, block_tables, q_pos, *,
-                           window: Optional[int], scale: float,
-                           attn_softcap: Optional[float] = None,
-                           interpret: bool = False):
-    """Verify attention over a paged KV pool: K+1 query positions per
-    slot in one kernel pass (speculative decoding's draft-verify step).
+def paged_mixed_attention(q, kpool, vpool, ppos, block_tables, q_pos, *,
+                          window: Optional[int], scale: float,
+                          attn_softcap: Optional[float] = None,
+                          interpret: bool = False):
+    """Variable-length mixed-batch attention over a paged KV pool: up to
+    W query positions per slot in one kernel pass, with *per-slot query
+    counts* — 1 real query for decode rows, chunk-length queries for
+    chunked-prefill rows, K+1 for speculative verify windows.
 
     Same contract as :func:`paged_decode_attention` with the query dim
-    widened: q (B, K1, Hq, D), q_pos (B, K1) absolute positions.  The
-    drafted tokens' K/V must already be in the pool (written by
-    ``kv_cache.paged_write_decode_multi``); stored positions make the
-    per-query causal mask exact inside the speculation window.
+    widened: q (B, W, Hq, D), q_pos (B, W) absolute positions where
+    **-1 marks a padding query** (its output lane is zeros; callers
+    discard it).  The window's own K/V must already be in the pool
+    (written by ``kv_cache.paged_write_decode_multi``); stored positions
+    make the per-query causal mask exact inside the window, so any
+    chunk boundary is legal.
     """
     B, K1, Hq, D = q.shape
     P, page, Hkv, Dv = vpool.shape
@@ -392,7 +404,7 @@ def paged_verify_attention(q, kpool, vpool, ppos, block_tables, q_pos, *,
         pid = bt[b, j]
         return jnp.where(pid < 0, dump, pid)
 
-    kernel = functools.partial(_paged_verify_kernel, scale=scale,
+    kernel = functools.partial(_paged_mixed_kernel, scale=scale,
                                attn_softcap=attn_softcap, window=window,
                                npages=npages, g=g)
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -425,10 +437,14 @@ def paged_verify_attention(q, kpool, vpool, ppos, block_tables, q_pos, *,
     return out
 
 
-def _paged_verify_kernel_q8(bt_ref, q_ref, k_ref, ks_ref, v_ref, vs_ref,
-                            kp_ref, qp_ref, o_ref, m_scr, l_scr, acc_scr,
-                            *, scale, attn_softcap, window, npages, g):
-    """Quantized-pool verify kernel: int8 page tiles + per-entry scale
+# speculative verify = the mixed entry with every row's window full
+paged_verify_attention = paged_mixed_attention
+
+
+def _paged_mixed_kernel_q8(bt_ref, q_ref, k_ref, ks_ref, v_ref, vs_ref,
+                           kp_ref, qp_ref, o_ref, m_scr, l_scr, acc_scr,
+                           *, scale, attn_softcap, window, npages, g):
+    """Quantized-pool mixed kernel: int8 page tiles + per-entry scale
     rows dequantized in-register (exactly _paged_kernel_q8's stream)
     feeding the multi-query online-softmax body."""
     b, j = pl.program_id(0), pl.program_id(1)
@@ -465,13 +481,14 @@ def _paged_verify_kernel_q8(bt_ref, q_ref, k_ref, ks_ref, v_ref, vs_ref,
 
 @functools.partial(jax.jit, static_argnames=("window", "scale",
                                              "attn_softcap", "interpret"))
-def paged_verify_attention_q8(q, kpool, k_scale, vpool, v_scale, ppos,
-                              block_tables, q_pos, *,
-                              window: Optional[int], scale: float,
-                              attn_softcap: Optional[float] = None,
-                              interpret: bool = False):
-    """:func:`paged_verify_attention` over an int8-quantized pool (same
-    scale-pool contract as :func:`paged_decode_attention_q8`)."""
+def paged_mixed_attention_q8(q, kpool, k_scale, vpool, v_scale, ppos,
+                             block_tables, q_pos, *,
+                             window: Optional[int], scale: float,
+                             attn_softcap: Optional[float] = None,
+                             interpret: bool = False):
+    """:func:`paged_mixed_attention` over an int8-quantized pool (same
+    scale-pool contract as :func:`paged_decode_attention_q8`; q_pos of
+    -1 marks padding queries exactly like the fp entry)."""
     B, K1, Hq, D = q.shape
     P, page, Hkv, Dv = vpool.shape
     npages = block_tables.shape[1]
@@ -482,7 +499,7 @@ def paged_verify_attention_q8(q, kpool, k_scale, vpool, v_scale, ppos,
         pid = bt[b, j]
         return jnp.where(pid < 0, dump, pid)
 
-    kernel = functools.partial(_paged_verify_kernel_q8, scale=scale,
+    kernel = functools.partial(_paged_mixed_kernel_q8, scale=scale,
                                attn_softcap=attn_softcap, window=window,
                                npages=npages, g=g)
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -517,6 +534,9 @@ def paged_verify_attention_q8(q, kpool, k_scale, vpool, v_scale, ppos,
         interpret=interpret,
     )(block_tables, q, kpool, k_scale, vpool, v_scale, ppos, q_pos)
     return out
+
+
+paged_verify_attention_q8 = paged_mixed_attention_q8
 
 
 @functools.partial(jax.jit, static_argnames=("window", "scale",

@@ -83,26 +83,31 @@ def maybe_paged_decode_attention(q, kpool, vpool, ppos, block_tables, q_pos,
                                      interpret=(_MODE == "interpret"))
 
 
-def maybe_paged_verify_attention(q, kpool, vpool, ppos, block_tables, q_pos,
-                                 *, window, scale, attn_softcap=None,
-                                 k_scale=None, v_scale=None):
-    """Multi-query paged attention for the speculative verify forward:
-    q (B, K+1, Hq, D) / q_pos (B, K+1) score a whole drafted window per
-    slot in one kernel pass."""
+def maybe_paged_mixed_attention(q, kpool, vpool, ppos, block_tables, q_pos,
+                                *, window, scale, attn_softcap=None,
+                                k_scale=None, v_scale=None):
+    """Multi-query paged attention with per-slot variable query counts:
+    q (B, W, Hq, D) / q_pos (B, W) score a whole per-slot window —
+    prefill chunk, speculation window, or a lone decode token — in one
+    kernel pass; q_pos == -1 marks padding queries (zero outputs)."""
     if _MODE == "off":
         return None
     from repro.kernels import decode_attention as DA
-    if not DA.paged_verify_shape_supported(q, kpool, block_tables):
+    if not DA.paged_mixed_shape_supported(q, kpool, block_tables):
         return None
     if k_scale is not None:
-        return DA.paged_verify_attention_q8(
+        return DA.paged_mixed_attention_q8(
             q, kpool, k_scale, vpool, v_scale, ppos, block_tables, q_pos,
             window=window, scale=scale, attn_softcap=attn_softcap,
             interpret=(_MODE == "interpret"))
-    return DA.paged_verify_attention(q, kpool, vpool, ppos, block_tables,
-                                     q_pos, window=window, scale=scale,
-                                     attn_softcap=attn_softcap,
-                                     interpret=(_MODE == "interpret"))
+    return DA.paged_mixed_attention(q, kpool, vpool, ppos, block_tables,
+                                    q_pos, window=window, scale=scale,
+                                    attn_softcap=attn_softcap,
+                                    interpret=(_MODE == "interpret"))
+
+
+# speculative verify = the mixed dispatch with every row's window full
+maybe_paged_verify_attention = maybe_paged_mixed_attention
 
 
 def maybe_rmsnorm(x, w):

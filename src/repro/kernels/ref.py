@@ -63,21 +63,26 @@ def paged_decode_attention_ref(q, kpool, vpool, ppos, block_tables, q_pos, *,
                                 scale=scale, attn_softcap=attn_softcap)
 
 
-def paged_verify_attention_ref(q, kpool, vpool, ppos, block_tables, q_pos,
-                               *, window: Optional[int], scale: float,
-                               attn_softcap: Optional[float] = None,
-                               k_scale=None, v_scale=None):
-    """Oracle for the multi-query paged *verify* kernel (speculative
-    decoding): q (B, K1, Hq, D) query positions q_pos (B, K1) against the
-    slot's gathered pages.  Causal masking inside the speculation window
-    falls out of the stored absolute positions — the drafted tokens'
-    K/V are already in the pool when verify attends.  Shares the
-    dense-gather + flash reference with the single-query oracle (which
-    is the K1 == 1 case)."""
+def paged_mixed_attention_ref(q, kpool, vpool, ppos, block_tables, q_pos,
+                              *, window: Optional[int], scale: float,
+                              attn_softcap: Optional[float] = None,
+                              k_scale=None, v_scale=None):
+    """Oracle for the multi-query paged *mixed* kernel (chunked prefill
+    rows, decode rows, speculative verify windows): q (B, W, Hq, D) with
+    per-slot query counts expressed through q_pos (B, W) — real queries
+    carry absolute positions, padding queries carry -1 and come back as
+    zeros.  Causal masking inside a window falls out of the stored
+    absolute positions — the window's own K/V are already in the pool
+    when it attends.  Shares the dense-gather + flash reference with the
+    single-query oracle (which is the W == 1 case)."""
     return paged_decode_attention_ref(
         q, kpool, vpool, ppos, block_tables, q_pos, window=window,
         scale=scale, attn_softcap=attn_softcap, k_scale=k_scale,
         v_scale=v_scale)
+
+
+# speculative verify = the mixed oracle with every row's window full
+paged_verify_attention_ref = paged_mixed_attention_ref
 
 
 def rmsnorm_ref(x, w, eps: float = 1e-6):

@@ -49,6 +49,18 @@ def main():
                          "instead of bucket batches")
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--steps-per-sync", type=int, default=4)
+    ap.add_argument("--max-batched-tokens", type=int, default=None,
+                    help="per-iteration token budget of the unified "
+                         "scheduler: decode tokens (one per live slot) "
+                         "plus chunked-prefill tokens never exceed it, "
+                         "so a long prompt cannot stall decode "
+                         "(default: engine default, 256)")
+    ap.add_argument("--chunked-prefill", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="unified token-budget iteration with chunked "
+                         "prefill (auto = on for layer families that "
+                         "support it; off = bucketed whole-prompt "
+                         "admission)")
     ap.add_argument("--prefix-cache", default="auto",
                     choices=["auto", "on", "off"],
                     help="radix prefix cache on the continuous path: "
@@ -108,6 +120,8 @@ def main():
                         max_new_tokens=args.max_new_tokens)
                 for i, t in enumerate(texts)]
         prefix = {"auto": None, "on": True, "off": False}[args.prefix_cache]
+        chunked = {"auto": None, "on": True,
+                   "off": False}[args.chunked_prefill]
         spec = None
         if args.spec != "off":
             from repro.core.speculative import SpecConfig
@@ -118,7 +132,8 @@ def main():
         done, metrics = engine.serve_continuous(
             reqs, sp, page_size=args.page_size,
             steps_per_sync=args.steps_per_sync, prefix_cache=prefix,
-            spec=spec)
+            spec=spec, max_batched_tokens=args.max_batched_tokens,
+            chunked_prefill=chunked)
         dt = time.time() - t0
         for r in done[:3]:
             print(f"[{r.uid}] {tok.decode(r.result or [])[:70]!r}")
@@ -128,6 +143,13 @@ def main():
             "tokens_per_s": round(metrics.generated_tokens / dt, 1),
             "p50_latency_s": round(metrics.percentile_latency(50), 3),
             "p99_latency_s": round(metrics.percentile_latency(99), 3),
+            "ttft_p50_s": round(metrics.ttft_p50, 4),
+            "ttft_p99_s": round(metrics.ttft_p99, 4),
+            "itl_p50_s": round(metrics.itl_p50, 4),
+            "itl_p99_s": round(metrics.itl_p99, 4),
+            "scheduler": metrics.scheduler,
+            "max_batched_tokens": metrics.max_batched_tokens,
+            "prefill_chunks": metrics.prefill_chunks,
             "decode_idle_frac": round(metrics.decode_idle_frac, 3),
             "prefill_pad_frac": round(metrics.prefill_pad_frac, 3),
             "prefix_hit_rate": round(metrics.prefix_hit_rate, 3),

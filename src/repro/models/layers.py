@@ -147,16 +147,19 @@ def mha_attention(q, k, v, q_pos, k_pos, *, window: Optional[int],
 def mha_attention_paged(q, pool, block_tables, q_pos, *,
                         window: Optional[int], scale: float,
                         attn_softcap: Optional[float] = None):
-    """Decode / verify attention against a paged KV pool (continuous
-    batching).
+    """Decode / mixed-window attention against a paged KV pool
+    (continuous batching).
 
-    q: (B,Sq,Hq,D) with Sq == 1 for single-token decode and Sq == K+1
-    for the speculative verify window (q_pos (B,Sq) absolute positions;
-    the window's own K/V must already be written to the pool, so the
-    stored positions make intra-window causal masking exact); pool:
-    {"pk"/"pv": (P,page,Hkv,D), "ppos": (P,page)}, plus
-    "pk_scale"/"pv_scale" (P,page,Hkv) when the pool stores int8;
-    block_tables: (B, pages_per_slot) physical page ids (-1 = none).
+    q: (B,Sq,Hq,D) with Sq == 1 for single-token decode and Sq == W > 1
+    for a per-slot query window — a chunked-prefill chunk, a speculative
+    verify window, or a decode token padded up to the batch width
+    (q_pos (B,Sq) absolute positions, -1 marking padding queries whose
+    outputs are zeroed and discarded; the window's own K/V must already
+    be written to the pool, so the stored positions make intra-window
+    causal masking exact); pool: {"pk"/"pv": (P,page,Hkv,D), "ppos":
+    (P,page)}, plus "pk_scale"/"pv_scale" (P,page,Hkv) when the pool
+    stores int8; block_tables: (B, pages_per_slot) physical page ids
+    (-1 = none).
 
     Dispatch: paged Pallas kernel (single- or multi-query variant;
     gathers pages in-kernel via scalar-prefetched block tables; int8
@@ -166,7 +169,7 @@ def mha_attention_paged(q, pool, block_tables, q_pos, *,
     from repro.core import kv_cache as KV
     from repro.kernels import ops as kops
     dispatch = (kops.maybe_paged_decode_attention if q.shape[1] == 1
-                else kops.maybe_paged_verify_attention)
+                else kops.maybe_paged_mixed_attention)
     out = dispatch(
         q, pool["pk"], pool["pv"], pool["ppos"], block_tables, q_pos,
         window=window, scale=scale, attn_softcap=attn_softcap,

@@ -161,11 +161,12 @@ def layer_apply(cfg: ModelConfig, spec: LayerSpec, p, x, *, positions,
     new_cache = None
     is_paged = cache is not None and "pk" in cache
     if mode == "verify" and (not is_paged or spec.mixer != ATTN):
-        # speculative verify is defined only over paged pure-attention
-        # layers (the same families prefix sharing supports): ring
-        # layers cannot roll back overwrites, recurrent/MLA state has no
-        # per-position rewind.  The engine gates before dispatch; this
-        # is the backstop.
+        # multi-token windows (speculative verify, chunked prefill) are
+        # defined only over paged pure-attention layers (the same
+        # families prefix sharing supports): ring layers cannot roll
+        # back overwrites, recurrent/MLA state has no per-position
+        # rewind and no legal mid-prompt chunk boundary.  The engine
+        # gates before dispatch; this is the backstop.
         raise NotImplementedError(
             f"verify mode is unsupported for layer family '{spec.mixer}' "
             f"/ dense caches")
@@ -537,6 +538,57 @@ def forward_verify(params, cfg: ModelConfig, tokens, cache, lengths, *,
     x, cache, _ = _run_all(cfg, params, x, positions=positions,
                            cache_pos=None, cache=cache, mode="verify",
                            max_len=max_len, paged=paged)
+    h_final = L.apply_norm(cfg, params["final_norm"], x)
+    logits = policy.output_cast(L.unembed(cfg, params, h_final))
+    return logits, cache
+
+
+def forward_mixed(params, cfg: ModelConfig, tokens, cache, row_start, n_q, *,
+                  policy: Policy = FP32, max_len: Optional[int] = None,
+                  paged=None):
+    """Mixed chunked-prefill / decode forward: per-slot variable-length
+    token windows against the paged pool in one pass.  The unified
+    engine calls it with packed single-chunk rows (B = 1, W = the
+    iteration's width bucket); the layout is general — any mix of
+    decode rows (1 token), chunk rows, and idle rows batches fine.
+
+    tokens: (B, W) — row b carries ``n_q[b]`` real tokens left-aligned
+    (1 pending token for decode rows, a prompt chunk for prefill rows,
+    0 for idle slots); row_start: (B,) the absolute position of each
+    row's first token (its write position).  Every real token's K/V is
+    scattered into the slot's pages (``paged_write_decode_multi``,
+    quantizing on int8 pools) and each query attends the slot's whole
+    paged history — pages written by *earlier* chunks, prefix-cache
+    pages mapped zero-copy at admission, and the window's own earlier
+    tokens (stored positions make the intra-window causal mask exact),
+    so any chunk boundary is legal, page-aligned or not.
+
+    Returns (logits (B, 1, V) at each row's LAST real token, cache):
+    for decode rows that is the next-token distribution, for a prompt's
+    final chunk it seeds sampling; other chunk rows' logits are
+    computed-and-discarded by the caller.  Padding lanes carry -1
+    positions: their writes land on the dump page and their queries are
+    fully masked (zero output), so idle slots never perturb the pool.
+
+    Gated like speculative verify to paged pure-attention families (see
+    ``layer_apply``); the engine falls back to bucketed whole-prompt
+    admission elsewhere.
+    """
+    B, W = tokens.shape
+    max_len = max_len or _cache_max_len(cfg, cache)
+    valid = jnp.arange(W)[None, :] < n_q[:, None]
+    positions = jnp.where(valid,
+                          row_start[:, None] + jnp.arange(W)[None, :], -1)
+    paged = dict(paged or {})
+    paged["active"] = valid
+    x = _embed(cfg, params, tokens, None, positions, policy)
+    x, cache, _ = _run_all(cfg, params, x, positions=positions,
+                           cache_pos=None, cache=cache, mode="verify",
+                           max_len=max_len, paged=paged)
+    # unembed only each row's sampled position (last real token) — the
+    # same logits economy as forward_prefill(last_only=True)
+    idx = jnp.maximum(n_q - 1, 0)
+    x = jnp.take_along_axis(x, idx[:, None, None].astype(jnp.int32), axis=1)
     h_final = L.apply_norm(cfg, params["final_norm"], x)
     logits = policy.output_cast(L.unembed(cfg, params, h_final))
     return logits, cache
