@@ -35,6 +35,14 @@ prompt's forward stalls every decode slot) and ON (budgeted chunks
 interleaved with decode) and records TTFT / inter-token-latency
 percentiles each way; greedy outputs must be bit-identical.
 
+``--trace overload`` stresses the overload ladder: long prompts arrive
+in three bursts against a page pool sized to ~1/3 of aggregate demand,
+with LRU preemption and a host KV tier enabled.  The A/B leg compares
+an uncontended run (pool = full demand) against the contended one:
+every request must still complete with a terminal outcome, at least
+one preemption must fire, greedy outputs must be bit-identical, and
+the per-iteration allocator/host audit runs throughout.
+
 Results are also written as machine-readable JSON (--out, default
 ``BENCH_serving.json``) so the perf trajectory is tracked across PRs.
 
@@ -120,6 +128,73 @@ def build_longprompt_trace(n_short: int, seed: int, vocab: int,
                         max_new_tokens=max(4, max_new // 4)))
     arrivals = [0.0] * n_short + [0.2]
     return reqs, arrivals
+
+
+def build_overload_trace(n: int, seed: int, vocab: int, max_prompt: int,
+                         max_new: int):
+    """Adversarial burst trace for the overload ladder: ``n`` requests
+    with deliberately long prompts (upper half of the length range, so
+    aggregate page demand is high) arriving in three tight waves.
+    Returns (requests, arrivals)."""
+    rng = np.random.default_rng(seed)
+    reqs, arrivals = [], []
+    waves = [0.0, 0.15, 0.3]
+    for i in range(n):
+        ln = int(rng.integers(max(3, max_prompt // 2), max_prompt + 1))
+        reqs.append(Request(uid=i,
+                            tokens=[2] + list(map(int, rng.integers(
+                                4, vocab, size=ln - 1))),
+                            max_new_tokens=max_new))
+        arrivals.append(waves[(len(waves) * i) // n])
+    return reqs, arrivals
+
+
+def run_overload_ab(args, engine_factory, trace, sp, arrivals):
+    """Serve the burst trace uncontended (pool = aggregate demand) and
+    contended (pool ~1/3 of demand, LRU preemption + host KV tier,
+    per-iteration audit on) and compare: the contended run must preempt
+    at least once yet finish every request with a terminal outcome and
+    bit-identical greedy output — overload degrades latency, never
+    results."""
+    from repro.core.scheduler import TERMINAL_STATUSES
+    ps = args.page_size
+    pages_per_slot = -(-args.max_len // ps)
+    demand = sum(min(-(-(len(r.tokens) + r.max_new_tokens) // ps),
+                     pages_per_slot) for r in trace)
+    contended_pool = args.num_pages or max(pages_per_slot + 2, demand // 3)
+    legs, outs, outcomes = {}, {}, {}
+    for name, kw in (
+            ("uncontended", dict(num_pages=demand)),
+            ("contended", dict(num_pages=contended_pool, preemption="lru",
+                               host_kv_bytes=1 << 30, debug_audit=True))):
+        eng = engine_factory()
+        run_continuous(eng, copy.deepcopy(trace), sp,       # warm compile
+                       page_size=ps, steps_per_sync=args.steps_per_sync,
+                       max_batched_tokens=args.max_batched_tokens,
+                       chunked_prefill=True, **kw)
+        reqs = copy.deepcopy(trace)
+        legs[name] = run_continuous(
+            eng, reqs, sp, page_size=ps,
+            steps_per_sync=args.steps_per_sync, arrivals=arrivals,
+            max_batched_tokens=args.max_batched_tokens,
+            chunked_prefill=True, **kw)
+        legs[name]["num_pages"] = kw["num_pages"]
+        outs[name] = [r.result for r in reqs]
+        outcomes[name] = [r.outcome for r in reqs]
+    contended = outcomes["contended"]
+    return {
+        "demand_pages": demand,
+        "contended_pool_frac": round(contended_pool / demand, 3),
+        "uncontended": legs["uncontended"],
+        "contended": legs["contended"],
+        "all_terminal": all(oc is not None
+                            and oc.status in TERMINAL_STATUSES
+                            for oc in contended),
+        "all_completed": all(oc is not None and oc.status == "completed"
+                             for oc in contended),
+        "outputs_identical_contended":
+            outs["contended"] == outs["uncontended"],
+    }
 
 
 def run_longprompt_ab(args, engine_factory, trace, sp, arrivals):
@@ -243,7 +318,8 @@ def run_bucket(engine: InferenceEngine, reqs, sp, arrivals=None) -> dict:
 def run_continuous(engine: InferenceEngine, reqs, sp, *, page_size,
                    steps_per_sync, arrivals=None, prefix_cache=False,
                    num_pages=None, spec=None, max_batched_tokens=None,
-                   chunked_prefill=None) -> dict:
+                   chunked_prefill=None, preemption="off",
+                   host_kv_bytes=None, debug_audit=False) -> dict:
     t0 = time.perf_counter()
     _, m = engine.serve_continuous(reqs, sp, page_size=page_size,
                                    num_pages=num_pages,
@@ -251,7 +327,10 @@ def run_continuous(engine: InferenceEngine, reqs, sp, *, page_size,
                                    arrivals=arrivals,
                                    prefix_cache=prefix_cache, spec=spec,
                                    max_batched_tokens=max_batched_tokens,
-                                   chunked_prefill=chunked_prefill)
+                                   chunked_prefill=chunked_prefill,
+                                   preemption=preemption,
+                                   host_kv_bytes=host_kv_bytes,
+                                   debug_audit=debug_audit)
     wall = time.perf_counter() - t0
     return {
         "wall_s": round(wall, 3),
@@ -280,6 +359,14 @@ def run_continuous(engine: InferenceEngine, reqs, sp, *, page_size,
         "peak_pages_in_use": m.peak_pages_in_use,
         "admission_stalls": m.admission_stalls,
         "rejected": m.rejected,
+        "preemptions": m.preemptions,
+        "resumed": m.resumed,
+        "offloaded_pages": m.offloaded_pages,
+        "restored_pages": m.restored_pages,
+        "host_bytes_peak": m.host_bytes_peak,
+        "timed_out": m.timed_out,
+        "deadline_misses": m.deadline_misses,
+        "outcomes": dict(sorted(m.outcome_counts.items())),
         "spec_mode": m.spec_mode,
         "spec_k": m.spec_k,
         "drafted_tokens": m.drafted_tokens,
@@ -420,12 +507,15 @@ def main():
                     help="arrival rate (req/s) for an open-loop trace; "
                          "default: all requests arrive at t=0")
     ap.add_argument("--trace", default="mixed",
-                    choices=["mixed", "shared", "longprompt"],
+                    choices=["mixed", "shared", "longprompt", "overload"],
                     help="mixed: lognormal lengths; shared: N requests "
                          "over --prefix-groups shared system prompts; "
                          "longprompt: one --long-prompt-len prompt "
                          "arriving mid-decode (chunked-prefill A/B: ITL "
-                         "p99 with the unified scheduler on vs off)")
+                         "p99 with the unified scheduler on vs off); "
+                         "overload: bursty long prompts vs a pool ~1/3 "
+                         "of demand (preemption + host-offload A/B: all "
+                         "requests must complete bit-identically)")
     ap.add_argument("--prefix-groups", type=int, default=8)
     ap.add_argument("--prefix-len", type=int, default=64)
     ap.add_argument("--suffix-max", type=int, default=12)
@@ -449,6 +539,26 @@ def main():
                                max_len=args.max_len)
 
     vocab = min(cfg.vocab_size, 800)
+    if args.trace == "overload":
+        # focused A/B: the standard bucket/continuous/prefix legs say
+        # nothing about overload, so the gate runs only the ladder
+        trace, ov_arrivals = build_overload_trace(
+            args.requests, args.seed, vocab,
+            args.max_len - args.max_new_tokens, args.max_new_tokens)
+        report = {
+            "arch": args.arch, "requests": args.requests,
+            "slots": args.max_batch, "max_new": args.max_new_tokens,
+            "trace": args.trace,
+            "overload": run_overload_ab(args, fresh_engine, trace, sp,
+                                        ov_arrivals),
+        }
+        print(json.dumps(report, indent=2))
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(report, f, indent=2)
+            print(f"wrote {args.out}")
+        return
+
     if args.trace == "shared":
         trace = build_shared_trace(
             args.requests, args.seed, vocab, args.prefix_groups,

@@ -29,12 +29,13 @@ kernels).
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.scheduler import Request
+from repro.core.scheduler import Request, RequestOutcome
 
 
 class PageAllocator:
@@ -118,6 +119,142 @@ class PageAllocator:
             raise AssertionError("non-positive refcount")
 
 
+class HostKVStore:
+    """Byte-budgeted host-memory KV tier — the level below the device
+    page pool in the degradation ladder.
+
+    Entries are opaque blobs (:func:`~repro.core.kv_cache.offload_pages`
+    snapshots) under caller-chosen keys.  Two citizen classes share the
+    budget: *evictable* entries (prefix-cache spills — best-effort warm
+    state) are dropped LRU to make room, *non-evictable* entries
+    (preemption snapshots — correctness-critical until resumed) stay
+    until popped.  A ``put`` that cannot fit even after evicting every
+    evictable entry is refused, never raises: callers degrade (recompute
+    the KV / drop the prefix) instead of failing the request.
+
+    ``max_bytes=None`` is unbounded; ``0`` refuses everything (the
+    host-tier-full fault mode).
+    """
+
+    def __init__(self, max_bytes: Optional[int] = None):
+        self.max_bytes = max_bytes
+        # key -> (blob, nbytes, evictable); OrderedDict order = LRU
+        self._entries: "OrderedDict[object, tuple]" = OrderedDict()
+        self.used_bytes = 0
+        self.peak_bytes = 0
+        self.spill_evictions = 0       # evictable entries dropped for room
+        self.refused_puts = 0          # blobs that could not fit at all
+
+    def __contains__(self, key) -> bool:
+        return key in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def peek(self, key):
+        """The blob under ``key`` (refreshing its LRU position), or None."""
+        e = self._entries.get(key)
+        if e is None:
+            return None
+        self._entries.move_to_end(key)
+        return e[0]
+
+    def pop(self, key):
+        """Remove and return the blob under ``key`` (None if absent)."""
+        e = self._entries.pop(key, None)
+        if e is None:
+            return None
+        self.used_bytes -= e[1]
+        return e[0]
+
+    def put(self, key, blob, *, evictable: bool = True) -> bool:
+        """Store ``blob`` under ``key`` (replacing any previous entry),
+        evicting LRU evictable entries if the budget requires.  Returns
+        False — and stores nothing — when it cannot fit."""
+        from repro.core.kv_cache import blob_bytes
+        nbytes = blob_bytes(blob)
+        old = self._entries.pop(key, None)
+        if old is not None:
+            self.used_bytes -= old[1]
+        if self.max_bytes is not None:
+            if nbytes > self.max_bytes:
+                if old is not None:        # replacement failed: entry gone
+                    self.refused_puts += 1
+                    return False
+                self.refused_puts += 1
+                return False
+            while self.used_bytes + nbytes > self.max_bytes:
+                victim = next((k for k, e in self._entries.items()
+                               if e[2]), None)
+                if victim is None:
+                    self.refused_puts += 1
+                    return False
+                _, vb, _ = self._entries.pop(victim)
+                self.used_bytes -= vb
+                self.spill_evictions += 1
+        self._entries[key] = (blob, nbytes, evictable)
+        self.used_bytes += nbytes
+        self.peak_bytes = max(self.peak_bytes, self.used_bytes)
+        return True
+
+    def check(self) -> None:
+        """Accounting invariant: used_bytes matches the resident blobs
+        and never exceeds the budget."""
+        total = sum(e[1] for e in self._entries.values())
+        if total != self.used_bytes:
+            raise AssertionError(
+                f"host tier leak: {self.used_bytes} booked != "
+                f"{total} resident bytes")
+        if self.max_bytes is not None and self.used_bytes > self.max_bytes:
+            raise AssertionError("host tier over budget")
+
+
+@dataclass
+class FaultConfig:
+    """Deterministic fault injection for ``serve_continuous`` — the
+    overload test harness.  Every fault must degrade gracefully: each
+    submitted request still ends with a terminal
+    :class:`~repro.core.scheduler.RequestOutcome`, the allocator audit
+    stays clean, and the serve loop terminates.
+
+      hold_pages        steal this many free pool pages (pool-exhaustion
+                        fault) once ``hold_after_admits`` admissions have
+                        happened; released before the end-of-run audit
+      hold_after_admits admissions to wait before stealing
+      host_full         force the host tier to refuse every offload
+                        (preemption degrades to recompute-resume, trie
+                        spills degrade to plain eviction)
+      oversize_uids     inflate these requests' prompts past the whole
+                        pool before admission (truncate-or-reject path)
+      collapse_arrivals ignore arrival offsets: every request lands at
+                        t=0 (adversarial burst)
+    """
+    hold_pages: int = 0
+    hold_after_admits: int = 0
+    host_full: bool = False
+    oversize_uids: Tuple[int, ...] = ()
+    collapse_arrivals: bool = False
+
+
+@dataclass
+class PreemptedState:
+    """Resume ticket for a preempted request (scheduler-internal,
+    keyed by uid while the request waits in the queue again).
+
+    ``blob`` is the host KV snapshot (None when the host tier was full —
+    resume then re-prefills prompt + generated tokens, which is greedy
+    bit-identical).  ``pending`` is the sampled-but-unwritten last token
+    (= emitted[-1]); ``ctx_len`` the written context length; ``rem`` the
+    remaining token budget at preemption.
+    """
+    blob: Optional[list]
+    emitted: List[int]
+    n_pages: int
+    ctx_len: int
+    pending: int
+    rem: int
+
+
 @dataclass
 class SlotState:
     request: Request
@@ -137,10 +274,34 @@ class SlotState:
     admit_seq: int = 0                 # FCFS tiebreak for prefill chunks
     needs_init: bool = True            # fresh pages not yet reset / COW'd
     last_token_at: Optional[float] = None   # wall time of last emit (ITL)
+    # -- preemption resume --------------------------------------------------
+    restore_blob: Optional[list] = None  # host KV snapshot to scatter back
+    resume_ctx: Optional[List[int]] = None  # recompute-resume: the context
+    #                                    (prompt + pre-preemption output) to
+    #                                    re-prefill in place of the prompt
+    resume_pending: int = -1           # pre-preemption sampled token; decode
+    #                                    continues from it (not a new sample)
+    resume_rem: int = -1               # token budget left at preemption
+
+    @property
+    def is_resume(self) -> bool:
+        return self.resume_pending >= 0
+
+    @property
+    def ctx(self) -> List[int]:
+        """Tokens the slot must have written before it can decode: the
+        prompt, or on a recompute-resume the prompt plus every token
+        generated before the preemption (minus the pending one)."""
+        return self.resume_ctx if self.resume_ctx is not None \
+            else self.request.tokens
+
+    @property
+    def ctx_len(self) -> int:
+        return len(self.ctx)
 
     @property
     def prefill_done(self) -> bool:
-        return self.prefill_pos >= self.request.prompt_len
+        return self.prefill_pos >= self.ctx_len
 
 
 @dataclass
@@ -207,6 +368,16 @@ class ServeMetrics:
     prefill_chunks: int = 0          # prefill chunk rows scheduled
     ttft_s: List[float] = field(default_factory=list)   # submit->first tok
     itl_s: List[float] = field(default_factory=list)    # inter-token gaps
+    # -- overload survivability (preemption + host KV tier) -----------------
+    preemptions: int = 0             # slots evicted under pool pressure
+    resumed: int = 0                 # preempted requests re-admitted
+    offloaded_pages: int = 0         # pages snapshotted to the host tier
+    restored_pages: int = 0          # pages brought back from the host tier
+    host_bytes_used: int = 0         # host tier bytes at end of run
+    host_bytes_peak: int = 0         # host tier high-water mark
+    timed_out: int = 0               # queued requests cancelled at deadline
+    deadline_misses: int = 0         # requests that died or finished late
+    outcome_counts: Dict[str, int] = field(default_factory=dict)
 
     @property
     def decode_idle_frac(self) -> float:
@@ -292,7 +463,8 @@ class ContinuousScheduler:
 
     def __init__(self, max_slots: int, allocator: PageAllocator,
                  page_size: int, max_pages_per_slot: Optional[int] = None,
-                 prefix_cache=None, match_prefix: bool = True):
+                 prefix_cache=None, match_prefix: bool = True,
+                 preemption: str = "off", max_preemptions: int = 2):
         self.max_slots = max_slots
         self.allocator = allocator
         self.page_size = page_size
@@ -303,6 +475,20 @@ class ContinuousScheduler:
         self.slots: Dict[int, SlotState] = {}      # slot idx -> state
         self._submit_t: Dict[int, float] = {}      # uid -> queued time
         self._admit_seq = 0                        # FCFS chunk ordering
+        # -- overload survivability ----------------------------------------
+        if preemption not in ("off", "lru", "priority"):
+            raise ValueError(f"unknown preemption policy {preemption!r}")
+        self.preemption = preemption
+        # a request preempted this many times becomes victim-ineligible
+        # (with back-of-queue re-entry this bounds preempt/resume churn)
+        self.max_preemptions = max_preemptions
+        self.host_store: Optional[HostKVStore] = None
+        # engine-injected device closures (host-side scheduler stays
+        # device-free): offload_fn(pages) -> blob, restore_fn(blob, pages)
+        self.offload_fn: Optional[Callable] = None
+        self.restore_fn: Optional[Callable] = None
+        self._resume: Dict[int, PreemptedState] = {}   # uid -> ticket
+        self.promoted_pages = 0        # host->device trie re-promotions
 
     # -- queue --------------------------------------------------------------
     def submit(self, req: Request, now: float = 0.0) -> None:
@@ -331,19 +517,228 @@ class ContinuousScheduler:
             pages = self.allocator.alloc(n)
         return pages
 
+    # -- deadlines / backpressure -------------------------------------------
+    def queued_pages_needed(self, req: Request) -> int:
+        """Worst-case pages the queued head will claim — a preempted
+        request resumes into exactly the page count it held."""
+        pr = self._resume.get(req.uid)
+        return pr.n_pages if pr is not None else self.pages_needed(req)
+
+    def _finalize(self, req: Request, status: str, detail: str = "",
+                  deadline_missed: bool = False) -> None:
+        """Terminal bookkeeping for a request that will never (re)run:
+        drop any resume ticket (preserving pre-preemption output as the
+        partial result) and attach the structured outcome."""
+        pr = self._resume.pop(req.uid, None)
+        if pr is not None and pr.blob is not None \
+                and self.host_store is not None:
+            self.host_store.pop(("preempt", req.uid))
+        req.result = pr.emitted[:req.max_new_tokens] if pr is not None \
+            else []
+        req.outcome = RequestOutcome(status=status,
+                                     preemptions=req.preemptions,
+                                     deadline_missed=deadline_missed,
+                                     detail=detail)
+
+    def cancel_expired(self, now: float = 0.0) -> List[Request]:
+        """Backpressure sweep over the queue: cancel requests whose
+        deadline or ``max_queue_wait`` has passed (``timed_out``) and
+        requests that can never fit the pool (``rejected``) — serving
+        stale work would only steal capacity from requests that can
+        still meet theirs.  Running slots are never cancelled.  Returns
+        the cancelled requests with terminal outcomes attached."""
+        kept, cancelled = [], []
+        for req in self.waiting:
+            status = detail = None
+            missed = False
+            waited = now - self._submit_t.get(req.uid, 0.0)
+            if req.deadline is not None and now > req.deadline:
+                status, missed = "timed_out", True
+                detail = f"deadline {req.deadline:.3f}s passed in queue"
+            elif req.max_queue_wait is not None \
+                    and waited > req.max_queue_wait:
+                status, missed = "timed_out", True
+                detail = (f"queued {waited:.3f}s > max_queue_wait "
+                          f"{req.max_queue_wait:.3f}s")
+            elif self.queued_pages_needed(req) > self.allocator.num_pages:
+                status = "rejected"
+                detail = (f"needs {self.queued_pages_needed(req)} pages, "
+                          f"pool holds {self.allocator.num_pages}")
+            if status is None:
+                kept.append(req)
+                continue
+            self._finalize(req, status, detail, deadline_missed=missed)
+            cancelled.append(req)
+        self.waiting = kept
+        return cancelled
+
+    def fail_head(self, detail: str = "") -> Optional[Request]:
+        """Reject the head-of-line request (the engine's no-slots escape
+        hatch: nothing is running, eviction already ran, and the head
+        still cannot fit — spinning would deadlock the loop)."""
+        if not self.waiting:
+            return None
+        req = self.waiting.pop(0)
+        self._finalize(req, "rejected", detail)
+        return req
+
+    # -- preemption ---------------------------------------------------------
+    def preempt_candidates(self, beneficiary: Request) -> List[int]:
+        """Slots eligible to be preempted for ``beneficiary`` under the
+        configured policy.  Only *decoding* slots qualify: preempting a
+        mid-prefill slot would throw away its prefill for no freed-up
+        decode capacity (it becomes preemptible the moment its prefill
+        completes).  A request that already burned ``max_preemptions``
+        is protected from further eviction."""
+        if self.preemption == "off":
+            return []
+        out = []
+        for s, st in self.slots.items():
+            r = st.request
+            if not st.prefill_done or not st.emitted:
+                continue
+            if r.preemptions >= self.max_preemptions:
+                continue
+            if self.preemption == "priority" \
+                    and r.priority >= beneficiary.priority:
+                continue
+            out.append(s)
+        return out
+
+    def pick_victim(self, beneficiary: Request) -> Optional[int]:
+        """The slot to evict for ``beneficiary``: lowest priority first,
+        most recently admitted as the tiebreak (the LRU policy reduces
+        to pure most-recently-admitted) — the oldest work in flight is
+        closest to completion and keeps its slot."""
+        cands = self.preempt_candidates(beneficiary)
+        if not cands:
+            return None
+        return max(cands, key=lambda s: (-self.slots[s].request.priority,
+                                         self.slots[s].admit_seq))
+
+    def preemptible_headroom(self, beneficiary: Request) -> int:
+        """Upper bound on pages an admission could obtain via the free
+        list + trie eviction + preempting every eligible victim.  A head
+        needing more than this can never be helped by preemption, so the
+        engine must not start evicting victims for it."""
+        evictable = self.prefix_cache.evictable_count() \
+            if self.prefix_cache is not None else 0
+        return (self.allocator.free_count + evictable
+                + sum(len(self.slots[s].pages)
+                      for s in self.preempt_candidates(beneficiary)))
+
+    def preempt(self, slot: int, *, pending: int, ctx_len: int,
+                rem_tokens: int) -> Tuple[SlotState, bool]:
+        """Evict a decoding slot under pool pressure: snapshot its paged
+        KV into the host tier (when one is attached and has room), free
+        its device pages, and re-queue the request at the BACK of the
+        queue with its generated tokens preserved.  Back-of-queue
+        re-entry is what breaks the preempt/resume livelock: the
+        beneficiary admits into the freed pages before the victim can
+        reclaim them.  Returns (victim state, offloaded?).
+
+        ``pending``/``ctx_len``/``rem_tokens`` come from the engine's
+        slot arrays: the sampled-but-unwritten token, written context
+        length, and remaining budget at the preemption point.
+        """
+        st = self.slots.pop(slot)
+        req = st.request
+        assert st.prefill_done and st.emitted, \
+            "only decoding slots are preemptible"
+        req.preemptions += 1
+        blob = None
+        if self.host_store is not None and self.offload_fn is not None:
+            blob = self.offload_fn(st.pages)
+            if not self.host_store.put(("preempt", req.uid), blob,
+                                       evictable=False):
+                blob = None            # host tier full: recompute-resume
+        self.release_cow_source(st)
+        for p in st.pages:
+            self.allocator.decref(p)
+        self._resume[req.uid] = PreemptedState(
+            blob=blob, emitted=list(st.emitted), n_pages=len(st.pages),
+            ctx_len=ctx_len, pending=pending, rem=rem_tokens)
+        self.waiting.append(req)
+        return st, blob is not None
+
+    def _try_resume(self, req: Request, pr: PreemptedState, slot: int,
+                    now: float) -> Optional[tuple]:
+        """Re-admit a preempted request: allocate the page count it held,
+        then either mark the slot for a host-tier restore (the engine
+        scatters the blob back; decode resumes bit-identically) or set
+        up a recompute-resume (re-prefill prompt + generated tokens as
+        ordinary chunks, then continue from the preserved pending
+        token — greedy bit-identical, just not free)."""
+        pages = self._alloc_with_eviction(pr.n_pages)
+        if pages is None:
+            return None
+        self.waiting.pop(0)
+        self._resume.pop(req.uid)
+        st = SlotState(request=req, pages=pages, fresh_pages=pages,
+                       admitted_at=now,
+                       submitted_at=self._submit_t.get(req.uid, 0.0),
+                       admit_seq=self._admit_seq)
+        self._admit_seq += 1
+        st.emitted = list(pr.emitted)
+        st.resume_ctx = list(req.tokens) + pr.emitted[:-1]
+        assert len(st.resume_ctx) == pr.ctx_len, \
+            "resume context desynchronized from written KV length"
+        st.resume_pending = pr.pending
+        st.resume_rem = pr.rem
+        if pr.blob is not None:
+            if self.host_store is not None:
+                self.host_store.pop(("preempt", req.uid))
+            st.restore_blob = pr.blob
+            st.prefill_pos = pr.ctx_len    # KV comes back verbatim
+            st.needs_init = False
+        self.slots[slot] = st
+        return slot, st
+
+    def _promote(self, tokens: List[int], matched: int,
+                 mpages: List[int]) -> Tuple[int, List[int]]:
+        """Extend a trie match from the host spill tier: while the next
+        full page span of ``tokens`` is spilled, allocate a device page,
+        restore the span's KV into it, and re-insert it into the trie.
+        Each promoted page enters holding both the trie's reference and
+        the caller's mapping reference (so a later eviction inside this
+        same admission cannot free it).  Returns the extended
+        (matched, pages)."""
+        ps = self.page_size
+        while matched % ps == 0 and matched + ps <= len(tokens):
+            key = ("trie", tuple(tokens[:matched + ps]))
+            blob = self.host_store.peek(key)
+            if blob is None:
+                break
+            pg = self._alloc_with_eviction(1)
+            if pg is None:
+                break
+            self.restore_fn(blob, pg)
+            self.host_store.pop(key)
+            # alloc's reference becomes the request mapping; the trie
+            # takes its own via insert's incref
+            self.prefix_cache.insert(tokens[:matched + ps],
+                                     mpages + pg, matched + ps)
+            mpages = mpages + pg
+            matched += ps
+            self.promoted_pages += 1
+        return matched, mpages
+
     # -- admit / retire -----------------------------------------------------
     def try_admit(self, now: float = 0.0) -> Optional[tuple]:
         """Pop the head-of-line request into a free slot if the pool can
         hold it.  Returns (slot_idx, SlotState) or None.  FCFS: a stuck
         head (pool too full) blocks admission — freeing happens via
-        retire and prefix-cache eviction, so this can't deadlock while
-        any slot is live."""
+        retire, prefix-cache eviction and (when enabled) preemption, so
+        this can't deadlock while any slot is live."""
         if not self.waiting:
             return None
         free = self.free_slots()
         if not free:
             return None
         req = self.waiting[0]
+        pr = self._resume.get(req.uid)
+        if pr is not None:
+            return self._try_resume(req, pr, free[0], now)
         total = self.pages_needed(req)
         matched, mpages = (0, [])
         if self.match_prefix and req.prompt_len > 1:
@@ -359,6 +754,12 @@ class ContinuousScheduler:
             self.allocator.incref(p)                 # zero-copy mapping
         if cow_src >= 0:
             self.allocator.incref(cow_src)           # pin the COW source
+        if cow_src < 0 and self.match_prefix and self.host_store is not None \
+                and self.restore_fn is not None and req.prompt_len > 1:
+            # page-aligned match end: the continuation may be spilled
+            matched, mpages = self._promote(
+                list(req.tokens[:req.prompt_len - 1]), matched, mpages)
+            shared = matched // self.page_size
         fresh = self._alloc_with_eviction(total - shared)
         if fresh is None:
             for p in mpages[:shared]:
@@ -404,7 +805,7 @@ class ContinuousScheduler:
             if rem <= 0:
                 break
             st = self.slots[s]
-            c = min(st.request.prompt_len - st.prefill_pos, rem)
+            c = min(st.ctx_len - st.prefill_pos, rem)
             chunks.append(ChunkPlan(slot=s, start=st.prefill_pos, length=c))
             rem -= c
         return MixedPlan(decode_slots=decode, chunks=chunks,
@@ -434,7 +835,13 @@ class ContinuousScheduler:
     def retire(self, slot: int, now: float = 0.0) -> SlotState:
         st = self.slots.pop(slot)
         st.finished_at = now
+        req = st.request
         st.request.result = st.emitted[:st.request.max_new_tokens]
+        req.outcome = RequestOutcome(
+            status="truncated" if req.truncated else "completed",
+            preemptions=req.preemptions,
+            deadline_missed=(req.deadline is not None
+                             and st.finished_at > req.deadline))
         self.release_cow_source(st)
         # finalized context -> cache it for future requests.  The last
         # emitted token's KV may never have been written (a budget-capped

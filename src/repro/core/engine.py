@@ -25,8 +25,8 @@ from repro.configs.base import (ATTN, HYBRID, MLSTM, MOE_FFN, SLSTM,
 from repro.core import kv_cache as KV
 from repro.core import prefix_cache as PC
 from repro.core import pruning as PR
-from repro.core.continuous import (ContinuousScheduler, PageAllocator,
-                                   ServeMetrics)
+from repro.core.continuous import (ContinuousScheduler, FaultConfig,
+                                   HostKVStore, PageAllocator, ServeMetrics)
 from repro.core.precision import BF16, Policy
 from repro.core.sampling import SamplingParams, sample, speculative_verify
 from repro.core.speculative import SpecConfig, get_drafter
@@ -576,7 +576,12 @@ class InferenceEngine:
                          prefix_cache: Optional[bool] = None,
                          spec: Optional[SpecConfig] = None,
                          max_batched_tokens: Optional[int] = None,
-                         chunked_prefill: Optional[bool] = None):
+                         chunked_prefill: Optional[bool] = None,
+                         preemption: str = "off",
+                         max_preemptions: int = 2,
+                         host_kv_bytes: Optional[int] = None,
+                         faults: Optional[FaultConfig] = None,
+                         debug_audit: bool = False):
         """Serve requests with continuous batching over a paged KV cache.
 
         Unlike :meth:`serve` (sort -> bucket -> drain), decode slots are
@@ -641,6 +646,38 @@ class InferenceEngine:
         ignored in speculative mode: drafting needs the emitted history
         after every verify, so each step is one host sync.
 
+        preemption / host_kv_bytes: overload survivability.  With
+        ``preemption`` "lru" (victim = most recently admitted) or
+        "priority" (victim = lowest ``Request.priority``, strictly below
+        the blocked head's), an admission that fails for *pages* while a
+        slot is free evicts a decoding victim: its paged KV is
+        snapshotted into a host-memory :class:`HostKVStore` of
+        ``host_kv_bytes`` capacity (when set), its device pages are
+        freed, and the request re-queues at the back with its generated
+        tokens preserved.  On re-admission the snapshot is restored and
+        decoding resumes bit-identically; if the host tier was full the
+        context (prompt + generated tokens) is re-prefilled instead —
+        same greedy stream, paid in compute.  The prefix trie spills
+        evicted full-page leaves into the same tier and re-promotes them
+        on a match.  Preemption requires the unified chunked scheduler
+        (resume re-prefill rides the chunk machinery) and is disabled,
+        loudly, on bucketed-only families.  ``max_preemptions`` bounds
+        per-request churn: a request evicted that many times keeps its
+        slot thereafter.
+
+        Deadlines: ``Request.deadline`` (absolute seconds on the serve
+        clock — the arrivals timeline) and ``Request.max_queue_wait``
+        cancel still-queued work once expired (structured ``timed_out``
+        outcome; a preempted request's generated tokens survive as a
+        partial result).  Running slots are never cancelled — a request
+        that finishes past its deadline completes and counts a deadline
+        miss.  Every submitted request ends with a terminal
+        ``Request.outcome``.
+
+        faults / debug_audit: deterministic fault injection (see
+        :class:`~repro.core.continuous.FaultConfig`) and a per-iteration
+        allocator + host-tier audit for the overload test harness.
+
         Returns (requests, ServeMetrics); ``r.result`` is filled like
         :meth:`serve`.
         """
@@ -696,6 +733,25 @@ class InferenceEngine:
                 f"{'verify window' if spec_on else 'decode token'} per "
                 f"slot; raising to {floor}")
             budget = floor
+        # -- overload survivability: preemption + host KV tier -------------
+        if preemption not in ("off", "lru", "priority"):
+            raise ValueError(f"unknown preemption policy {preemption!r}")
+        if preemption != "off" and not chunked:
+            warnings.warn("preemption requested but disabled — it needs "
+                          "the unified chunked scheduler (resume "
+                          "re-prefill rides the chunk machinery)")
+            preemption = "off"
+        host = None
+        if host_kv_bytes is not None or (faults is not None
+                                         and faults.host_full):
+            hb = 0 if (faults is not None and faults.host_full) \
+                else host_kv_bytes
+            host = ctx.get("host")
+            if host is None or host.max_bytes != hb:
+                # spilled prefixes from a previous budget are dropped
+                # with the old store; preempt blobs never outlive a call
+                host = HostKVStore(hb)
+                ctx["host"] = host
         mixed_fn = self._mixed_fns(sp) if chunked else None
         # the decode share of a mixed iteration is a single fused step
         step_fn1 = self._continuous_fns(sp, 1)[2] if chunked else None
@@ -718,7 +774,26 @@ class InferenceEngine:
         cache = ctx["cache"]
         sched = ContinuousScheduler(slots, ctx["alloc"], page_size,
                                     max_pages_per_slot=pages_per_slot,
-                                    prefix_cache=trie, match_prefix=share)
+                                    prefix_cache=trie, match_prefix=share,
+                                    preemption=preemption,
+                                    max_preemptions=max_preemptions)
+
+        # device closures for the host-side scheduler/trie: both always
+        # see the *latest* cache pytree (restore rebinds it)
+        def offload_fn(pages):
+            return KV.offload_pages(cache, pages)
+
+        def restore_fn(blob, pages):
+            nonlocal cache
+            cache = KV.restore_pages(cache, blob, pages)
+
+        sched.host_store = host
+        sched.offload_fn = offload_fn
+        sched.restore_fn = restore_fn
+        trie.host_store = host
+        trie.offload_fn = offload_fn if host is not None else None
+        spill_base = trie.spilled_pages
+        promote_base = sched.promoted_pages
         metrics = ServeMetrics(kv_dtype=ctx["kv_dtype"],
                                kv_pool_bytes=ctx["kv_pool_bytes"],
                                kv_bytes_per_token=ctx["kv_bytes_per_token"],
@@ -737,15 +812,31 @@ class InferenceEngine:
         act = np.zeros((slots,), bool)
         rng = self.rng
 
+        if faults is not None and faults.collapse_arrivals:
+            arrivals = None            # adversarial burst: all at t=0
         order = sorted(range(len(requests)),
                        key=lambda i: arrivals[i]) if arrivals else \
             list(range(len(requests)))
         incoming = [(arrivals[i] if arrivals else 0.0, requests[i])
                     for i in order]
+        fault_hold: List[int] = []     # pool pages a fault is squatting on
         t0 = time.perf_counter()
 
         def now():
             return time.perf_counter() - t0
+
+        def count_outcome(req):
+            """Fold a request's terminal outcome into the run metrics —
+            called exactly once per request, at its terminal point."""
+            oc = req.outcome
+            metrics.outcome_counts[oc.status] = \
+                metrics.outcome_counts.get(oc.status, 0) + 1
+            if oc.deadline_missed:
+                metrics.deadline_misses += 1
+            if oc.status == "timed_out":
+                metrics.timed_out += 1
+            elif oc.status == "rejected":
+                metrics.rejected += 1
 
         def retire(slot):
             st = sched.retire(slot, now())
@@ -753,6 +844,7 @@ class InferenceEngine:
             act[slot] = False
             metrics.retired += 1
             metrics.generated_tokens += len(st.request.result)
+            count_outcome(st.request)
             # queue wait counts: latency is submission -> completion
             metrics.latency_s.append(st.finished_at - st.submitted_at)
 
@@ -831,7 +923,9 @@ class InferenceEngine:
                 req = st.request
                 W = pick_bucket(c.length, width_buckets)
                 toks = np.zeros((1, W), np.int32)
-                toks[0, :c.length] = req.tokens[c.start:c.start + c.length]
+                # st.ctx == the prompt, except on a recompute-resume
+                # where it also replays the pre-preemption output
+                toks[0, :c.length] = st.ctx[c.start:c.start + c.length]
                 reset_row = np.full((1, pages_per_slot), dump, np.int32)
                 cow_src = np.full((1,), dump, np.int32)
                 cow_dst = np.full((1,), dump, np.int32)
@@ -861,7 +955,7 @@ class InferenceEngine:
                 # dispatch pipeline keeps flowing — prefill_s then books
                 # a mid-prompt chunk's device time against whichever
                 # later dispatch blocks on it
-                if c.start + c.length >= req.prompt_len:
+                if c.start + c.length >= st.ctx_len and not st.is_resume:
                     nxt = np.asarray(jax.block_until_ready(nxt))
                 stats.prefill_s += time.perf_counter() - tm0
                 metrics.prefill_chunks += 1
@@ -874,11 +968,22 @@ class InferenceEngine:
                 if not st.prefill_done:
                     continue
                 # final chunk: its last-token logits seeded sampling
-                plen = req.prompt_len
-                # newly produced page-aligned prompt KV joins the trie
+                plen = st.ctx_len
+                # newly produced page-aligned context KV joins the trie
                 # now (the partial tail joins at retire, once decode can
                 # no longer write into it)
                 sched.insert_prefix(st, (plen // page_size) * page_size)
+                if st.is_resume:
+                    # recompute-resume: the next token was already
+                    # sampled before the preemption — continue from it
+                    # verbatim (greedy bit-identity) instead of the
+                    # replayed final chunk's fresh sample
+                    tok[c.slot] = st.resume_pending
+                    lens[c.slot] = plen
+                    rem[c.slot] = st.resume_rem
+                    act[c.slot] = True
+                    st.last_token_at = now()
+                    continue
                 first = int(nxt[0])
                 gen_budget = min(req.max_new_tokens, self.max_len - plen)
                 if first != EOS and gen_budget > 0:
@@ -900,6 +1005,14 @@ class InferenceEngine:
                     req.tokens = [int(t) for t in PR.remap_tokens(
                         np.asarray([req.tokens], np.int32),
                         self.prune_maps)[0]]
+                if faults is not None and req.uid in faults.oversize_uids:
+                    # inflate past the whole pool: the truncate-or-reject
+                    # machinery below must absorb it, never raise
+                    target = max(self.max_len,
+                                 num_pages * page_size) + page_size
+                    req.tokens = (req.tokens
+                                  * (target // max(len(req.tokens), 1)
+                                     + 1))[:target]
                 if req.prompt_len > self.max_len:
                     # must cut: leave the truncated prompt room to
                     # actually generate (reserve its token budget, but
@@ -908,7 +1021,19 @@ class InferenceEngine:
                                 self.max_len // 2)
                     req.tokens = truncate_prompt(req.tokens, limit,
                                                  uid=req.uid)
+                    req.truncated = True
                 sched.submit(req, now())
+
+            # -- backpressure: cancel expired / unservable queued work ----
+            for req in sched.cancel_expired(now()):
+                count_outcome(req)
+
+            # -- fault injection: pool-exhaustion squatter ----------------
+            if faults is not None and faults.hold_pages and not fault_hold \
+                    and metrics.admitted >= faults.hold_after_admits:
+                fault_hold = sched.allocator.alloc(
+                    min(faults.hold_pages,
+                        sched.allocator.free_count)) or []
 
             # -- admit into free slots ------------------------------------
             if chunked:
@@ -917,16 +1042,60 @@ class InferenceEngine:
                 # the mixed iterations below, interleaved with decode
                 while True:
                     adm = sched.try_admit(now())
-                    if adm is None:
+                    if adm is not None:
+                        slot, st = adm
+                        block_tables[slot, :] = -1
+                        block_tables[slot, :len(st.pages)] = st.pages
+                        if st.restore_blob is not None:
+                            # host-tier resume: scatter the snapshot back
+                            # and rejoin decode exactly where it stopped
+                            cache = KV.restore_pages(cache,
+                                                     st.restore_blob,
+                                                     st.pages)
+                            st.restore_blob = None
+                            metrics.restored_pages += len(st.pages)
+                            metrics.resumed += 1
+                            tok[slot] = st.resume_pending
+                            lens[slot] = st.ctx_len
+                            rem[slot] = st.resume_rem
+                            act[slot] = True
+                            st.last_token_at = now()
+                        elif st.is_resume:
+                            # host tier was full: re-prefill the context
+                            # as ordinary chunks (recompute-resume)
+                            metrics.resumed += 1
+                        else:
+                            stats.prompt_tokens += st.request.prompt_len
+                            metrics.admitted += 1
+                            metrics.prefix_hits += st.matched_len > 0
+                            metrics.prefix_matched_tokens += st.matched_len
+                            metrics.pages_shared += st.shared_count
+                        continue
+                    # admission failed: preempt a decoding victim for the
+                    # blocked head — only when a slot is FREE (pure pool
+                    # pressure) and the head could actually fit after
+                    # evicting every eligible victim (else preemption is
+                    # churn that can never admit it)
+                    if preemption == "off" or not sched.waiting \
+                            or not sched.free_slots():
                         break
-                    slot, st = adm
-                    block_tables[slot, :] = -1
-                    block_tables[slot, :len(st.pages)] = st.pages
-                    stats.prompt_tokens += st.request.prompt_len
-                    metrics.admitted += 1
-                    metrics.prefix_hits += st.matched_len > 0
-                    metrics.prefix_matched_tokens += st.matched_len
-                    metrics.pages_shared += st.shared_count
+                    head = sched.waiting[0]
+                    if sched.queued_pages_needed(head) \
+                            > sched.preemptible_headroom(head):
+                        break
+                    victim = sched.pick_victim(head)
+                    if victim is None:
+                        break
+                    n_pages = len(sched.slots[victim].pages)
+                    _, offloaded = sched.preempt(
+                        victim, pending=int(tok[victim]),
+                        ctx_len=int(lens[victim]),
+                        rem_tokens=int(rem[victim]))
+                    act[victim] = False
+                    block_tables[victim, :] = -1
+                    metrics.preemptions += 1
+                    if offloaded:
+                        metrics.offloaded_pages += n_pages
                 metrics.peak_pages_in_use = max(
                     metrics.peak_pages_in_use,
                     sched.allocator.allocated_count)
@@ -1051,20 +1220,30 @@ class InferenceEngine:
                 # request's pages — the capacity ceiling int8 KV raises
                 metrics.admission_stalls += 1
 
+            if debug_audit:
+                # fault-injection harness: refcount + host accounting
+                # invariants must hold on EVERY iteration, not just at
+                # the end of the run
+                sched.allocator.check()
+                if host is not None:
+                    host.check()
+
             if not sched.slots:
                 if sched.waiting:
                     # head request can never fit (no slot is live and
                     # eviction already reclaimed every unpinned cached
-                    # page): fail it loudly rather than spin forever
-                    req = sched.waiting.pop(0)
+                    # page): fail it with a structured outcome rather
+                    # than spin forever, and keep serving the rest
+                    head = sched.waiting[0]
+                    detail = (f"needs {sched.queued_pages_needed(head)} "
+                              f"pages but the pool holds "
+                              f"{sched.allocator.num_pages} "
+                              f"({sched.allocator.free_count} free after "
+                              f"eviction)")
                     warnings.warn(
-                        f"request {req.uid}: needs "
-                        f"{sched.pages_needed(req)} pages but the pool "
-                        f"holds {sched.allocator.num_pages} "
-                        f"({sched.allocator.free_count} free after "
-                        f"eviction); rejecting")
-                    req.result = []
-                    metrics.rejected += 1
+                        f"request {head.uid}: {detail}; rejecting")
+                    req = sched.fail_head(detail)
+                    count_outcome(req)
                     continue
                 if incoming:        # idle until the next arrival
                     time.sleep(max(0.0, min(incoming[0][0] - now(), 0.01)))
@@ -1125,7 +1304,19 @@ class InferenceEngine:
 
         self.rng = rng
         ctx["cache"] = cache           # pool persists across serve calls
+        if fault_hold:                 # release the injected squatter
+            sched.allocator.free(fault_hold)
         metrics.prefix_evicted_pages = trie.evicted_pages - trie_base
+        # trie spills count as offloads, promotions as restores; the trie
+        # outlives this call but its device closure must not (the next
+        # serve rebinds a fresh cache) — spills pause between calls
+        metrics.offloaded_pages += trie.spilled_pages - spill_base
+        metrics.restored_pages += sched.promoted_pages - promote_base
+        trie.offload_fn = None
+        if host is not None:
+            host.check()
+            metrics.host_bytes_used = host.used_bytes
+            metrics.host_bytes_peak = host.peak_bytes
         if self.prune_maps is not None:
             for r in requests:
                 if r.result:

@@ -508,6 +508,73 @@ def reset_pages(cache, pages) -> dict:
     return out
 
 
+# -- host-memory offload / restore: the overload escape valve ---------------
+#
+# Under pool pressure the scheduler preempts a slot: its pages' bytes move
+# to host memory (``offload_pages``) so the device pages can be freed, and
+# move back verbatim (``restore_pages``) when the request is re-admitted —
+# decode then resumes bit-identically, no recompute.  The same primitives
+# back the prefix cache's host spill tier.  Both run outside jit (rare
+# events on the slow path); ordering is safe because the engine always
+# threads the *latest* cache pytree through them.
+
+
+def offload_pages(cache: dict, pages) -> list:
+    """Snapshot the full contents of physical ``pages`` to host memory.
+
+    Returns a nested blob ``[per stack][per layer]`` where paged layers
+    contribute ``{leaf key: np.ndarray}`` covering every paged leaf
+    (K/V codes, int8 scale pools, positions — ``PAGED_KEYS``) and
+    non-paged layers (dense per-slot state) contribute ``None``.  The
+    gather device-syncs; leaves with a leading scan-repeats dim keep it.
+    """
+    import numpy as np
+    pages = np.asarray(pages, np.int32)
+    blob = []
+    for stack_c in cache["layers"]:
+        row = []
+        for c in stack_c:
+            if not (isinstance(c, dict) and "ppos" in c):
+                row.append(None)
+                continue
+            rep = c["ppos"].ndim == 3          # leading scan-repeats dim
+            row.append({k: np.asarray(c[k][:, pages] if rep
+                                      else c[k][pages])
+                        for k in PAGED_KEYS if k in c})
+        blob.append(row)
+    return blob
+
+
+def restore_pages(cache: dict, blob: list, pages) -> dict:
+    """Scatter an :func:`offload_pages` blob back into physical ``pages``
+    (any pages — restore need not land where the snapshot was taken).
+    Every paged leaf row is overwritten wholesale, so no prior
+    ``reset_pages`` is needed: stale previous-owner state cannot survive.
+    """
+    import numpy as np
+    pages = np.asarray(pages, np.int32)
+    layers = []
+    for stack_c, brow in zip(cache["layers"], blob):
+        row = []
+        for c, b in zip(stack_c, brow):
+            if b is None:
+                row.append(c)
+                continue
+            rep = c["ppos"].ndim == 3
+            row.append({k: (c[k].at[:, pages].set(b[k]) if rep
+                            else c[k].at[pages].set(b[k]))
+                        if k in b else c[k] for k in c})
+        layers.append(tuple(row))
+    return {"layers": tuple(layers)}
+
+
+def blob_bytes(blob: list) -> int:
+    """Host bytes an :func:`offload_pages` blob occupies (what the
+    byte-budgeted host tier accounts against its capacity)."""
+    return sum(a.nbytes for row in blob for d in row if d
+               for a in d.values())
+
+
 # -- slot view / merge: admission prefill on a slot subset ------------------
 
 

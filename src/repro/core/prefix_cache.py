@@ -93,6 +93,13 @@ class RadixPrefixCache:
         # cumulative, survives serve runs (per-run hit/match counters
         # live in ServeMetrics, which the engine fills at admission)
         self.evicted_pages = 0
+        # host spill tier (set per serve call by the engine): evicted
+        # full-page leaves demote into ``host_store`` via ``offload_fn``
+        # instead of dropping, and the scheduler re-promotes them on a
+        # match — the prefix cache outgrows device memory
+        self.host_store = None         # HostKVStore or None
+        self.offload_fn = None         # pages -> blob (device closure)
+        self.spilled_pages = 0         # cumulative leaves demoted to host
 
     # -- introspection ------------------------------------------------------
     def _iter_nodes(self):
@@ -113,6 +120,24 @@ class RadixPrefixCache:
     def _touch(self, node: _Node) -> None:
         self._tick += 1
         node.tick = self._tick
+
+    def evictable_count(self) -> int:
+        """Pages :meth:`evict` could free right now: unpinned leaves no
+        live request maps (the scheduler's preemption-headroom bound)."""
+        return sum(1 for nd in self._iter_nodes()
+                   if not nd.children and not nd.pinned
+                   and self.allocator.refcount(nd.page) == 1)
+
+    def _span_key(self, node: _Node) -> tuple:
+        """Host-tier key for a node: the full token path from the root
+        (what a future admission will look up by)."""
+        parts = []
+        cur = node
+        while cur is not None and cur.parent is not None:
+            parts.append(cur.tokens)
+            cur = cur.parent
+        return ("trie", tuple(t for chunk in reversed(parts)
+                              for t in chunk))
 
     # -- match --------------------------------------------------------------
     def match(self, tokens: Sequence[int]) -> Tuple[int, List[int]]:
@@ -220,6 +245,15 @@ class RadixPrefixCache:
                 continue                        # stale heap entry
             if self.allocator.refcount(nd.page) > 1:
                 continue                        # a live request maps it
+            if (self.host_store is not None and self.offload_fn is not None
+                    and len(nd.tokens) == self.page_size):
+                # demote to host instead of dropping (full-page leaves
+                # only: partial spans are not addressable by a
+                # page-aligned promote lookup).  A refused put (host
+                # full) degrades to the plain drop below.
+                if self.host_store.put(self._span_key(nd),
+                                       self.offload_fn([nd.page])):
+                    self.spilled_pages += 1
             self.allocator.decref(nd.page)
             freed += 1
             self.evicted_pages += 1

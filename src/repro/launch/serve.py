@@ -79,6 +79,27 @@ def main():
                          "streams are bit-identical to --spec off")
     ap.add_argument("--spec-k", type=int, default=4,
                     help="drafted tokens per slot per verify step")
+    ap.add_argument("--preemption", default="off",
+                    choices=["off", "lru", "priority"],
+                    help="overload survivability on the continuous path: "
+                         "when admission fails for pages while a slot is "
+                         "free, evict a decoding victim (lru = most "
+                         "recently admitted, priority = lowest "
+                         "Request.priority), offload its KV to the host "
+                         "tier and re-queue it — generated tokens "
+                         "preserved, greedy streams bit-identical")
+    ap.add_argument("--host-kv-bytes", type=int, default=None,
+                    help="host-memory KV tier capacity in bytes: holds "
+                         "preempted slots' page snapshots and spilled "
+                         "prefix-cache leaves (default: no host tier; "
+                         "preemption then resumes by re-prefilling)")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request deadline in seconds on the serve "
+                         "clock: requests still queued past it are "
+                         "cancelled with a timed_out outcome")
+    ap.add_argument("--debug-audit", action="store_true",
+                    help="audit allocator refcounts + host-tier byte "
+                         "accounting every serve iteration")
     ap.add_argument("--prune-coverage", type=float, default=None,
                     help="e.g. 0.999 -> prune vocab to that corpus coverage")
     ap.add_argument("--temperature", type=float, default=0.0)
@@ -117,7 +138,8 @@ def main():
         shared = tok.encode(" ".join(synthetic_corpus(
             3, seed=11)))[:args.shared_prefix] if args.shared_prefix else []
         reqs = [Request(uid=i, tokens=shared + tok.encode(t),
-                        max_new_tokens=args.max_new_tokens)
+                        max_new_tokens=args.max_new_tokens,
+                        deadline=args.deadline)
                 for i, t in enumerate(texts)]
         prefix = {"auto": None, "on": True, "off": False}[args.prefix_cache]
         chunked = {"auto": None, "on": True,
@@ -133,7 +155,9 @@ def main():
             reqs, sp, page_size=args.page_size,
             steps_per_sync=args.steps_per_sync, prefix_cache=prefix,
             spec=spec, max_batched_tokens=args.max_batched_tokens,
-            chunked_prefill=chunked)
+            chunked_prefill=chunked, preemption=args.preemption,
+            host_kv_bytes=args.host_kv_bytes,
+            debug_audit=args.debug_audit)
         dt = time.time() - t0
         for r in done[:3]:
             print(f"[{r.uid}] {tok.decode(r.result or [])[:70]!r}")
@@ -161,6 +185,14 @@ def main():
             "kv_bytes_per_token": round(metrics.kv_bytes_per_token, 1),
             "peak_pages_in_use": metrics.peak_pages_in_use,
             "admission_stalls": metrics.admission_stalls,
+            "preemptions": metrics.preemptions,
+            "resumed": metrics.resumed,
+            "offloaded_pages": metrics.offloaded_pages,
+            "restored_pages": metrics.restored_pages,
+            "host_bytes_peak": metrics.host_bytes_peak,
+            "timed_out": metrics.timed_out,
+            "deadline_misses": metrics.deadline_misses,
+            "outcomes": dict(sorted(metrics.outcome_counts.items())),
             "spec_mode": metrics.spec_mode,
             "acceptance_rate": round(metrics.acceptance_rate, 3),
             "tokens_per_forward": round(metrics.tokens_per_forward, 3),

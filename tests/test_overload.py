@@ -1,0 +1,617 @@
+"""Overload-survivable serving (PR-6 tentpole).
+
+Contracts under test:
+  * offload -> restore is bit-identical for bf16/fp32 AND int8 pools
+    (codes + scale pools + positions round-trip byte-exact);
+  * preemption + host KV offload: under pool pressure (demand ~3x the
+    pool) every request still completes, greedy outputs bit-identical
+    to an uncontended run across {plain, prefix-shared, int8,
+    speculative}, allocator audit clean;
+  * recompute-resume (host tier absent or full) stays bit-identical —
+    degraded in compute, never in results;
+  * refcounts never go negative across preempt/restore, and preempting
+    one sharer never disturbs pages another reader maps (COW/sharing
+    safety);
+  * deadlines / max_queue_wait cancel queued work with structured
+    timed_out outcomes; completions past deadline count misses;
+  * every injected fault (pool exhaustion, host-tier-full, oversized
+    prompts, arrival bursts) ends every request in a terminal
+    RequestOutcome with no deadlock and a clean per-iteration audit;
+  * the trie spills evicted leaves to host and re-promotes them on a
+    later match;
+  * new ServeMetrics fields are zero-guarded like the existing ones.
+"""
+import copy
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    # when hypothesis is installed (CI installs it), the invariant
+    # harness below also runs as a generative property test
+    from hypothesis import given, settings, strategies as st
+    settings.register_profile("overload", deadline=None, max_examples=20)
+    settings.load_profile("overload")
+    HAVE_HYPOTHESIS = True
+except ImportError:                    # seeded fallback still runs
+    HAVE_HYPOTHESIS = False
+
+from repro.configs.registry import get_reduced
+from repro.core import kv_cache as KV
+from repro.core.continuous import (ContinuousScheduler, FaultConfig,
+                                   HostKVStore, PageAllocator, ServeMetrics)
+from repro.core.engine import InferenceEngine
+from repro.core.precision import FP32
+from repro.core.prefix_cache import RadixPrefixCache
+from repro.core.scheduler import TERMINAL_STATUSES, Request
+from repro.models import transformer as T
+
+INT8 = dataclasses.replace(FP32, kv_dtype="int8")
+
+
+# ---------------------------------------------------------------------------
+# HostKVStore accounting
+# ---------------------------------------------------------------------------
+
+
+def _blob(nbytes):
+    """A fake offload blob of ``nbytes`` host bytes (one stack, one
+    paged layer)."""
+    return [[{"pk": np.zeros(nbytes, np.int8)}]]
+
+
+def test_host_store_budget_and_lru():
+    hs = HostKVStore(max_bytes=100)
+    assert hs.put("a", _blob(40)) and hs.put("b", _blob(40))
+    assert hs.used_bytes == 80
+    hs.peek("a")                           # refresh a: b becomes LRU
+    assert hs.put("c", _blob(40))          # evicts b
+    assert "b" not in hs and "a" in hs and "c" in hs
+    assert hs.spill_evictions == 1 and hs.used_bytes == 80
+    hs.check()
+
+
+def test_host_store_nonevictable_protected():
+    hs = HostKVStore(max_bytes=100)
+    assert hs.put("pinned", _blob(80), evictable=False)
+    assert not hs.put("big", _blob(50))    # cannot evict the pinned entry
+    assert hs.refused_puts == 1 and "pinned" in hs
+    assert hs.pop("pinned") is not None
+    assert hs.used_bytes == 0
+    hs.check()
+
+
+def test_host_store_overwrite_and_zero_budget():
+    hs = HostKVStore(max_bytes=100)
+    hs.put("k", _blob(60))
+    assert hs.put("k", _blob(30))          # replace: bytes re-accounted
+    assert hs.used_bytes == 30 and len(hs) == 1
+    full = HostKVStore(max_bytes=0)        # the host-tier-full fault mode
+    assert not full.put("x", _blob(1))
+    assert full.used_bytes == 0 and full.refused_puts == 1
+    hs.check(), full.check()
+
+
+def test_host_store_unbounded():
+    hs = HostKVStore(max_bytes=None)
+    for i in range(5):
+        assert hs.put(i, _blob(1000))
+    assert hs.used_bytes == 5000 and hs.peak_bytes == 5000
+    hs.check()
+
+
+# ---------------------------------------------------------------------------
+# offload_pages / restore_pages round-trip
+# ---------------------------------------------------------------------------
+
+
+def _fill_pool(cache, rng):
+    """Write random bytes into every paged leaf so the round-trip has
+    real content to preserve."""
+    layers = []
+    for stack_c in cache["layers"]:
+        row = []
+        for c in stack_c:
+            if isinstance(c, dict) and "ppos" in c:
+                c = dict(c)
+                for k in KV.PAGED_KEYS:
+                    if k in c:
+                        a = c[k]
+                        if a.dtype == np.int32:
+                            val = rng.integers(-1, 50, size=a.shape)
+                        else:
+                            val = rng.normal(size=a.shape) * 3
+                        c[k] = a.at[...].set(
+                            np.asarray(val).astype(a.dtype))
+            row.append(c)
+        layers.append(tuple(row))
+    return {"layers": tuple(layers)}
+
+
+@pytest.mark.parametrize("kv_dtype", ["auto", "int8"])
+def test_offload_restore_bit_identical(rng, kv_dtype):
+    cfg = get_reduced("qwen3-4b")
+    cache = T.init_paged_cache(cfg, num_pages=8, page_size=8, max_slots=2,
+                               max_len=64, dtype=np.float32,
+                               kv_dtype=kv_dtype)
+    cache = _fill_pool(cache, rng)
+    pages = [1, 3, 6]
+    blob = KV.offload_pages(cache, pages)
+    assert KV.blob_bytes(blob) > 0
+    if kv_dtype == "int8":
+        # the blob must carry the quantized codes AND the scale pools
+        leaf = next(d for row in blob for d in row if d)
+        assert {"pk", "pv", "ppos", "pk_scale", "pv_scale"} <= set(leaf)
+    # clobber the offloaded pages, restore into different ones, compare
+    clobbered = KV.reset_pages_all(cache, np.asarray(pages))
+    dst = [0, 2, 5]
+    restored = KV.restore_pages(clobbered, blob, dst)
+    for stack_i, stack_c in enumerate(cache["layers"]):
+        for li, c in enumerate(stack_c):
+            if not (isinstance(c, dict) and "ppos" in c):
+                continue
+            rc = restored["layers"][stack_i][li]
+            rep = c["ppos"].ndim == 3      # leading scan-repeats dim
+            for k in KV.PAGED_KEYS:
+                if k not in c:
+                    continue
+                src_v = np.asarray(c[k][:, pages] if rep else c[k][pages])
+                dst_v = np.asarray(rc[k][:, dst] if rep else rc[k][dst])
+                np.testing.assert_array_equal(src_v, dst_v)
+
+
+# ---------------------------------------------------------------------------
+# Preemption end-to-end: bit-identical under ~3x pool pressure
+# ---------------------------------------------------------------------------
+
+
+def _reqs(rng, cfg, shapes, prefix=None, **kw):
+    prefix = prefix or []
+    return [Request(uid=i,
+                    tokens=[2] + prefix + list(map(int, rng.integers(
+                        4, min(cfg.vocab_size, 400), size=ln))),
+                    max_new_tokens=mn, **kw)
+            for i, (ln, mn) in enumerate(shapes)]
+
+
+def _serve(eng, reqs, **kw):
+    done, m = eng.serve_continuous(copy.deepcopy(reqs), page_size=8,
+                                   chunked_prefill=True,
+                                   max_batched_tokens=16, **kw)
+    return {r.uid: r.result for r in done}, m, done
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_reduced("qwen3-4b")
+    return cfg, T.init_params(jax.random.PRNGKey(0), cfg)
+
+
+# demand: 6 requests x 5 pages = 30 pages; pool: 11 pages (~1/3)
+SHAPES = [(30, 8), (28, 8), (26, 8), (24, 8), (22, 8), (20, 8)]
+POOL = 11
+
+
+@pytest.mark.parametrize("mode", ["plain", "prefix", "int8", "spec"])
+def test_preempt_offload_bit_identical(rng, qwen, mode):
+    cfg, params = qwen
+    policy = INT8 if mode == "int8" else FP32
+    prefix = list(map(int, rng.integers(4, 400, size=16))) \
+        if mode == "prefix" else None
+    shapes = [(ln - 16, mn) for ln, mn in SHAPES] if prefix else SHAPES
+    reqs = _reqs(rng, cfg, shapes, prefix=prefix)
+    spec = None
+    if mode == "spec":
+        from repro.core.speculative import SpecConfig
+        spec = SpecConfig(k=3, drafter="ngram")
+
+    def eng():
+        return InferenceEngine(cfg, params, policy=policy, max_len=64,
+                               max_batch=3)
+
+    base, _, _ = _serve(eng(), reqs, spec=spec)
+    out, m, done = _serve(eng(), reqs, spec=spec, num_pages=POOL,
+                          preemption="lru", host_kv_bytes=1 << 30,
+                          debug_audit=True)
+    assert m.preemptions >= 1 and m.resumed == m.preemptions
+    assert m.offloaded_pages > 0 and m.restored_pages > 0
+    assert m.host_bytes_peak > 0
+    for r in done:
+        assert r.outcome is not None \
+            and r.outcome.status in TERMINAL_STATUSES
+        assert r.outcome.status == "completed"
+    assert out == base, f"preempted outputs diverged ({mode})"
+
+
+def test_recompute_resume_bit_identical(rng, qwen):
+    """No host tier at all: preemption falls back to re-prefilling the
+    context — slower, still bit-identical."""
+    cfg, params = qwen
+    reqs = _reqs(rng, cfg, SHAPES)
+
+    def eng():
+        return InferenceEngine(cfg, params, policy=FP32, max_len=64,
+                               max_batch=3)
+
+    base, _, _ = _serve(eng(), reqs)
+    out, m, _ = _serve(eng(), reqs, num_pages=POOL, preemption="lru",
+                       debug_audit=True)
+    assert m.preemptions >= 1 and m.offloaded_pages == 0
+    assert out == base
+
+
+def test_host_full_fault_degrades_to_recompute(rng, qwen):
+    cfg, params = qwen
+    reqs = _reqs(rng, cfg, SHAPES)
+
+    def eng():
+        return InferenceEngine(cfg, params, policy=FP32, max_len=64,
+                               max_batch=3)
+
+    base, _, _ = _serve(eng(), reqs)
+    out, m, done = _serve(eng(), reqs, num_pages=POOL, preemption="lru",
+                          host_kv_bytes=1 << 30,
+                          faults=FaultConfig(host_full=True),
+                          debug_audit=True)
+    assert m.preemptions >= 1 and m.offloaded_pages == 0
+    assert all(r.outcome.status in TERMINAL_STATUSES for r in done)
+    assert out == base
+
+
+def test_priority_policy_prefers_low_priority_victims(rng, qwen):
+    """A high-priority blocked head evicts low-priority work; an
+    equal-priority head never preempts (strict inequality)."""
+    cfg, params = qwen
+    reqs = _reqs(rng, cfg, SHAPES[:4])
+    reqs[2].priority = 5                   # becomes the blocked head
+
+    def eng():
+        return InferenceEngine(cfg, params, policy=FP32, max_len=64,
+                               max_batch=3)
+
+    base, _, _ = _serve(eng(), reqs)
+    out, m, done = _serve(eng(), reqs, num_pages=POOL,
+                          preemption="priority", host_kv_bytes=1 << 30,
+                          debug_audit=True)
+    assert m.preemptions >= 1
+    by_uid = {r.uid: r for r in done}
+    assert by_uid[2].preemptions == 0      # priority 5 never evicted
+    assert out == base
+
+    # all equal priority -> strictly-greater rule disables preemption
+    _, m2, _ = _serve(eng(), _reqs(rng, cfg, SHAPES[:4]), num_pages=POOL,
+                      preemption="priority", host_kv_bytes=1 << 30)
+    assert m2.preemptions == 0
+
+
+def test_max_preemptions_caps_churn(rng, qwen):
+    cfg, params = qwen
+    reqs = _reqs(rng, cfg, SHAPES)
+    eng = InferenceEngine(cfg, params, policy=FP32, max_len=64,
+                          max_batch=3)
+    _, m, done = _serve(eng, reqs, num_pages=POOL, preemption="lru",
+                        host_kv_bytes=1 << 30, max_preemptions=1)
+    assert all(r.preemptions <= 1 for r in done)
+    assert all(r.outcome.status == "completed" for r in done)
+
+
+def test_preemption_requires_chunked_scheduler(rng, qwen):
+    cfg, params = qwen
+    reqs = _reqs(rng, cfg, SHAPES[:2])
+    eng = InferenceEngine(cfg, params, policy=FP32, max_len=64,
+                          max_batch=3)
+    with pytest.warns(UserWarning, match="preemption requested"):
+        done, m = eng.serve_continuous(copy.deepcopy(reqs), page_size=8,
+                                       chunked_prefill=False,
+                                       preemption="lru")
+    assert m.preemptions == 0
+    assert all(r.outcome.status == "completed" for r in done)
+
+
+# ---------------------------------------------------------------------------
+# Deadlines / backpressure
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_cancels_queued_work(rng, qwen):
+    cfg, params = qwen
+    reqs = _reqs(rng, cfg, [(20, 6), (18, 6), (16, 6)])
+    reqs[2].deadline = -1.0                # expired before it can start
+    eng = InferenceEngine(cfg, params, policy=FP32, max_len=64,
+                          max_batch=2)
+    done, m = eng.serve_continuous(copy.deepcopy(reqs), page_size=8,
+                                   chunked_prefill=True,
+                                   max_batched_tokens=16)
+    by_uid = {r.uid: r for r in done}
+    assert by_uid[2].outcome.status == "timed_out"
+    assert by_uid[2].outcome.deadline_missed
+    assert by_uid[2].result == []
+    assert m.timed_out == 1 and m.deadline_misses >= 1
+    assert m.outcome_counts["timed_out"] == 1
+    assert by_uid[0].outcome.status == "completed"
+
+
+def test_max_queue_wait_cancels_stuck_head(rng, qwen):
+    cfg, params = qwen
+    reqs = _reqs(rng, cfg, [(30, 8), (28, 8), (26, 8), (24, 8)])
+    for r in reqs[2:]:
+        r.max_queue_wait = 0.0             # cancel the moment they queue
+    eng = InferenceEngine(cfg, params, policy=FP32, max_len=64,
+                          max_batch=2)
+    done, m = eng.serve_continuous(copy.deepcopy(reqs), page_size=8,
+                                   num_pages=POOL, chunked_prefill=True,
+                                   max_batched_tokens=16)
+    by_uid = {r.uid: r for r in done}
+    assert by_uid[2].outcome.status == "timed_out"
+    assert by_uid[3].outcome.status == "timed_out"
+    assert by_uid[0].outcome.status == "completed"
+    assert m.timed_out == 2
+
+
+def test_completed_past_deadline_counts_miss():
+    """A request that is already running at its deadline completes (we
+    never cancel in-flight work) but books a deadline miss.  Scheduler
+    level: the serve clock is wall time, so this is the deterministic
+    way to pin the retire-past-deadline path."""
+    alloc = PageAllocator(8)
+    sched = ContinuousScheduler(1, alloc, page_size=4)
+    req = Request(uid=0, tokens=[1, 2, 3], max_new_tokens=2, deadline=0.5)
+    sched.submit(req, 0.0)
+    slot, st = sched.try_admit(0.1)
+    st.prefill_pos = st.ctx_len
+    st.emitted.extend([5, 6])
+    sched.retire(slot, now=1.0)            # finishes past the deadline
+    assert req.outcome.status == "completed"
+    assert req.outcome.deadline_missed
+    assert req.result == [5, 6]
+    alloc.check()
+
+
+# ---------------------------------------------------------------------------
+# Fault-injection suite: graceful degradation, never deadlock
+# ---------------------------------------------------------------------------
+
+
+FAULTS = [
+    FaultConfig(hold_pages=6, hold_after_admits=2),
+    FaultConfig(host_full=True),
+    FaultConfig(oversize_uids=(1, 3)),
+    FaultConfig(collapse_arrivals=True),
+    FaultConfig(hold_pages=8, host_full=True, oversize_uids=(0,),
+                collapse_arrivals=True),
+]
+
+
+@pytest.mark.parametrize("fault", FAULTS)
+def test_fault_injection_terminal_outcomes(rng, qwen, fault):
+    cfg, params = qwen
+    reqs = _reqs(rng, cfg, SHAPES)
+    for r in reqs[3:]:
+        r.max_queue_wait = 20.0            # bounded even under pool theft
+    arrivals = [0.0, 0.0, 0.05, 0.05, 0.1, 0.1]
+    eng = InferenceEngine(cfg, params, policy=FP32, max_len=64,
+                          max_batch=3)
+    done, m = eng.serve_continuous(
+        copy.deepcopy(reqs), page_size=8, num_pages=POOL,
+        chunked_prefill=True, max_batched_tokens=16, arrivals=arrivals,
+        preemption="lru", host_kv_bytes=1 << 30, faults=fault,
+        debug_audit=True)
+    assert len(done) == len(reqs)
+    for r in done:
+        assert r.outcome is not None, f"request {r.uid} has no outcome"
+        assert r.outcome.status in TERMINAL_STATUSES
+        assert r.result is not None
+    # the audit ran every iteration and the end-of-run leak check passed
+    # inside serve_continuous; outcome counts cover every request
+    assert sum(m.outcome_counts.values()) == len(reqs)
+
+
+def test_oversize_fault_truncates_or_rejects(rng, qwen):
+    cfg, params = qwen
+    reqs = _reqs(rng, cfg, [(10, 4), (10, 4)])
+    eng = InferenceEngine(cfg, params, policy=FP32, max_len=64,
+                          max_batch=2)
+    with pytest.warns(UserWarning, match="exceeds the maximum"):
+        done, m = eng.serve_continuous(
+            copy.deepcopy(reqs), page_size=8, chunked_prefill=True,
+            max_batched_tokens=16,
+            faults=FaultConfig(oversize_uids=(1,)), debug_audit=True)
+    by_uid = {r.uid: r for r in done}
+    assert by_uid[0].outcome.status == "completed"
+    # the inflated prompt was truncated to fit and served to completion
+    assert by_uid[1].outcome.status == "truncated"
+    assert by_uid[1].result
+
+
+# ---------------------------------------------------------------------------
+# Trie spill -> host -> promote
+# ---------------------------------------------------------------------------
+
+
+def test_trie_spill_and_promote(rng, qwen):
+    """Evicted prefix pages demote to host; a later admission matching
+    the spilled span restores it into a fresh device page instead of
+    re-prefilling."""
+    cfg, params = qwen
+    prefix = list(map(int, rng.integers(4, 400, size=23)))
+    reqs = _reqs(rng, cfg, [(8, 6)], prefix=prefix)
+    eng = InferenceEngine(cfg, params, policy=FP32, max_len=64,
+                          max_batch=2)
+    base, m0, _ = _serve(eng, reqs, host_kv_bytes=1 << 30)
+    trie = eng._paged_ctx["trie"]
+    host = eng._paged_ctx["host"]
+    # force-evict everything the trie holds (as pool pressure would)
+    spilled_before = trie.spilled_pages
+    trie.host_store = host
+    trie.offload_fn = lambda pages: KV.offload_pages(
+        eng._paged_ctx["cache"], pages)
+    trie.evict(64)
+    assert trie.spilled_pages > spilled_before
+    assert len(host) > 0
+    trie.offload_fn = None
+    # same prefix again: the spilled spans promote back device-side
+    reqs2 = [Request(uid=9, tokens=reqs[0].tokens[:24] + [7, 8, 9],
+                     max_new_tokens=6)]
+    out2, m2, _ = _serve(eng, reqs2, host_kv_bytes=1 << 30)
+    assert m2.restored_pages > 0
+    assert m2.prefix_matched_tokens > 0
+
+
+# ---------------------------------------------------------------------------
+# Scheduler-level invariants (hypothesis + seeded fallback)
+# ---------------------------------------------------------------------------
+
+
+def _stub_sched(num_pages=24, slots=3, preemption="lru", host=None):
+    alloc = PageAllocator(num_pages)
+    trie = RadixPrefixCache(alloc, page_size=8)
+    sched = ContinuousScheduler(slots, alloc, page_size=8,
+                                max_pages_per_slot=8, prefix_cache=trie,
+                                match_prefix=True, preemption=preemption)
+    sched.host_store = host
+    # device-free stubs: a blob is just the page list it snapshotted
+    sched.offload_fn = lambda pages: [[{"pk": np.zeros(
+        (len(pages), 8), np.int8)}]]
+    sched.restore_fn = lambda blob, pages: None
+    return sched, alloc, trie
+
+
+def _preempt_resume_trace(seed: int):
+    """Randomized admit/decode/preempt/cancel/retire sequences: the
+    allocator must audit clean after EVERY operation, refcounts can
+    never go negative, and every request ends terminal."""
+    rng = np.random.default_rng(seed)
+    host = HostKVStore(max_bytes=int(rng.integers(0, 4000))) \
+        if rng.random() < 0.7 else None
+    sched, alloc, trie = _stub_sched(
+        num_pages=int(rng.integers(12, 40)),
+        slots=int(rng.integers(2, 5)),
+        preemption=["lru", "priority"][int(rng.integers(0, 2))],
+        host=host)
+    n = int(rng.integers(4, 12))
+    reqs = [Request(uid=u,
+                    tokens=[1] + list(map(int, rng.integers(2, 9, size=int(
+                        rng.integers(4, 40))))),
+                    max_new_tokens=int(rng.integers(2, 8)),
+                    priority=int(rng.integers(0, 3)))
+            for u in range(n)]
+    for r in reqs:
+        sched.submit(r, 0.0)
+    terminal = set()
+    steps = 0
+    while sched.has_work():
+        steps += 1
+        assert steps < 4000, "scheduler live/deadlocked"
+        op = rng.random()
+        for req in sched.cancel_expired(float(steps)):
+            terminal.add(req.uid)
+        alloc.check()
+        if op < 0.5:
+            adm = sched.try_admit(float(steps))
+            if adm is None and sched.waiting and sched.free_slots():
+                head = sched.waiting[0]
+                if sched.queued_pages_needed(head) \
+                        <= sched.preemptible_headroom(head):
+                    v = sched.pick_victim(head)
+                    if v is not None:
+                        st = sched.slots[v]
+                        sched.preempt(
+                            v, pending=st.emitted[-1],
+                            ctx_len=(len(st.request.tokens)
+                                     + len(st.emitted) - 1),
+                            rem_tokens=2)
+            elif adm is not None:
+                _, st = adm
+                st.prefill_pos = st.ctx_len          # instant prefill
+                if not st.emitted:
+                    st.emitted.append(7)
+        elif op < 0.8 and sched.slots:
+            s = int(rng.choice(list(sched.slots)))
+            st = sched.slots[s]
+            if st.prefill_done:
+                st.emitted.append(7)
+                if len(st.emitted) >= st.request.max_new_tokens:
+                    sched.retire(s, float(steps))
+                    terminal.add(st.request.uid)
+        elif sched.waiting and rng.random() < 0.2:
+            sched.waiting[0].max_queue_wait = -1.0   # doom the head
+        alloc.check()
+        if host is not None:
+            host.check()
+    for r in reqs:
+        assert r.uid in terminal or r.outcome is not None \
+            or r.result is not None
+        if r.outcome is not None:
+            assert r.outcome.status in TERMINAL_STATUSES
+    alloc.check()
+
+
+def test_preempt_resume_invariants_seeded():
+    for seed in range(40):
+        _preempt_resume_trace(seed)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(deadline=None, max_examples=40)
+    @given(st.integers(0, 10_000))
+    def test_preempt_resume_invariants_hypothesis(seed):
+        _preempt_resume_trace(seed)
+
+
+def test_preempt_never_disturbs_other_readers():
+    """COW/sharing safety: preempting one sharer must not change the
+    refcounts or mappings of pages another slot still reads."""
+    alloc = PageAllocator(16)
+    trie = RadixPrefixCache(alloc, page_size=4)
+    sched = ContinuousScheduler(2, alloc, page_size=4,
+                                max_pages_per_slot=8, prefix_cache=trie,
+                                preemption="lru")
+    sched.host_store = HostKVStore()
+    offloaded = []
+    sched.offload_fn = lambda pages: (offloaded.append(list(pages)),
+                                      [[{"pk": np.zeros(2, np.int8)}]])[1]
+    sched.restore_fn = lambda blob, pages: None
+    shared_toks = [1, 2, 3, 4, 5, 6, 7, 8]
+    ra = Request(uid=0, tokens=shared_toks + [9], max_new_tokens=4)
+    rb = Request(uid=1, tokens=shared_toks + [11], max_new_tokens=4)
+    sched.submit(ra), sched.submit(rb)
+    sa, sta = sched.try_admit()
+    sta.prefill_pos = sta.ctx_len
+    sta.emitted.append(7)
+    sched.insert_prefix(sta, 8)            # both full pages join the trie
+    sb, stb = sched.try_admit()
+    stb.prefill_pos = stb.ctx_len
+    stb.emitted.append(7)
+    assert stb.shared_count == 2           # B maps A's two prefix pages
+    shared_pages = stb.pages[:2]
+    before = [alloc.refcount(p) for p in shared_pages]
+    assert all(c >= 3 for c in before)     # trie + A + B
+    sched.preempt(sa, pending=7, ctx_len=9, rem_tokens=3)
+    # A's snapshot covered its pages (shared prefix included, read-only),
+    # but the shared pages only lost A's reference — B still reads them
+    assert offloaded and set(shared_pages) <= set(offloaded[0])
+    after = [alloc.refcount(p) for p in shared_pages]
+    assert after == [c - 1 for c in before]
+    assert all(alloc.refcount(p) >= 2 for p in shared_pages)
+    alloc.check()
+    sched.retire(sb)
+    alloc.check()
+
+
+# ---------------------------------------------------------------------------
+# Metrics zero-guards
+# ---------------------------------------------------------------------------
+
+
+def test_overload_metrics_zero_guards():
+    m = ServeMetrics()
+    assert m.preemptions == 0 and m.resumed == 0
+    assert m.offloaded_pages == 0 and m.restored_pages == 0
+    assert m.host_bytes_used == 0 and m.host_bytes_peak == 0
+    assert m.timed_out == 0 and m.deadline_misses == 0
+    assert m.outcome_counts == {}
+    # existing derived guards still hold on an empty run
+    assert m.decode_idle_frac == 0.0 and m.acceptance_rate == 0.0
+    assert m.prefix_hit_rate == 0.0 and m.itl_p99 == 0.0
