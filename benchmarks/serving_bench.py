@@ -203,7 +203,7 @@ def run_longprompt_ab(args, engine_factory, trace, sp, arrivals):
     record the inter-token-latency tail each way — plus greedy parity,
     which must be bit-exact."""
     from repro.core.engine import (DEFAULT_MAX_BATCHED_TOKENS,
-                                   mixed_width_buckets)
+                                   packed_width_buckets)
     legs = {}
     outs = {}
     for name, on in (("chunked_off", False), ("chunked_on", True)):
@@ -214,14 +214,14 @@ def run_longprompt_ab(args, engine_factory, trace, sp, arrivals):
                        max_batched_tokens=args.max_batched_tokens,
                        chunked_prefill=on)
         if on:
-            # chunk widths depend on how many slots were decoding when
+            # stream widths depend on how many slots were decoding when
             # each chunk was cut — i.e. on arrival timing — so the trace
             # warm-up above may miss width buckets the measured run
-            # hits.  Touch every mixed window width once (one lone
-            # request per bucket prefills as a single that-wide chunk)
+            # hits.  Touch every packed stream width once (one lone
+            # request per bucket packs as a single that-wide stream)
             # so the measured run never pays a mid-trace XLA compile.
             budget = args.max_batched_tokens or DEFAULT_MAX_BATCHED_TOKENS
-            for i, w in enumerate(mixed_width_buckets(budget)):
+            for i, w in enumerate(packed_width_buckets(budget)):
                 if w > args.max_len - 4:
                     break
                 # prefix matching must be off here: a warm request would
@@ -252,6 +252,63 @@ def run_longprompt_ab(args, engine_factory, trace, sp, arrivals):
         if on_p99 else float("nan"),
         "outputs_identical_chunked_on_off":
             outs["chunked_on"] == outs["chunked_off"],
+    }
+
+
+def run_packed_ab(args, engine_factory, trace, sp, arrivals):
+    """Serve the trace on the unified scheduler with token-packed
+    execution OFF (decode micro-step + one (1, W) dispatch per prefill
+    chunk) and ON (the whole mixed iteration as ONE (1, T) ragged
+    dispatch) — greedy parity must be bit-exact; the packed leg must
+    make exactly one dispatch per mixed iteration with near-zero padded
+    FLOPs."""
+    from repro.core.engine import (DEFAULT_MAX_BATCHED_TOKENS,
+                                   mixed_width_buckets,
+                                   packed_width_buckets)
+    legs = {}
+    outs = {}
+    for name, on in (("packed_off", False), ("packed_on", True)):
+        eng = engine_factory()
+        run_continuous(eng, copy.deepcopy(trace), sp,       # warm compile
+                       page_size=args.page_size, num_pages=args.num_pages,
+                       steps_per_sync=args.steps_per_sync,
+                       max_batched_tokens=args.max_batched_tokens,
+                       chunked_prefill=True, packed=on)
+        # chunk widths (bucketed leg) and stream widths (packed leg)
+        # both depend on arrival timing; touch every width bucket of
+        # the leg's own ladder once so the measured run never pays a
+        # mid-trace XLA compile
+        budget = args.max_batched_tokens or DEFAULT_MAX_BATCHED_TOKENS
+        ladder = (packed_width_buckets if on else mixed_width_buckets)
+        for i, w in enumerate(ladder(budget)):
+            if w > args.max_len - 4:
+                break
+            eng.serve_continuous(
+                [Request(uid=20_000 + i, tokens=[2] * w,
+                         max_new_tokens=2)],
+                sp, page_size=args.page_size, num_pages=args.num_pages,
+                steps_per_sync=args.steps_per_sync,
+                max_batched_tokens=args.max_batched_tokens,
+                chunked_prefill=True, packed=on, prefix_cache=False)
+        eng.reset_prefix_cache()
+        reqs = copy.deepcopy(trace)
+        legs[name] = run_continuous(
+            eng, reqs, sp, page_size=args.page_size,
+            num_pages=args.num_pages, steps_per_sync=args.steps_per_sync,
+            arrivals=arrivals, max_batched_tokens=args.max_batched_tokens,
+            chunked_prefill=True, packed=on)
+        outs[name] = [r.result for r in reqs]
+    off, on = legs["packed_off"], legs["packed_on"]
+    return {
+        **legs,
+        "tokens_per_s_ratio": round(
+            on["tokens_per_s"] / off["tokens_per_s"], 3)
+        if off["tokens_per_s"] else float("nan"),
+        "itl_p99_improvement": round(
+            off["itl_p99_s"] / on["itl_p99_s"], 3)
+        if on["itl_p99_s"] else float("nan"),
+        "outputs_identical_packed_on_off":
+            outs["packed_on"] == outs["packed_off"],
     }
 
 
@@ -318,7 +375,7 @@ def run_bucket(engine: InferenceEngine, reqs, sp, arrivals=None) -> dict:
 def run_continuous(engine: InferenceEngine, reqs, sp, *, page_size,
                    steps_per_sync, arrivals=None, prefix_cache=False,
                    num_pages=None, spec=None, max_batched_tokens=None,
-                   chunked_prefill=None, preemption="off",
+                   chunked_prefill=None, packed=None, preemption="off",
                    host_kv_bytes=None, debug_audit=False) -> dict:
     t0 = time.perf_counter()
     _, m = engine.serve_continuous(reqs, sp, page_size=page_size,
@@ -328,7 +385,7 @@ def run_continuous(engine: InferenceEngine, reqs, sp, *, page_size,
                                    prefix_cache=prefix_cache, spec=spec,
                                    max_batched_tokens=max_batched_tokens,
                                    chunked_prefill=chunked_prefill,
-                                   preemption=preemption,
+                                   packed=packed, preemption=preemption,
                                    host_kv_bytes=host_kv_bytes,
                                    debug_audit=debug_audit)
     wall = time.perf_counter() - t0
@@ -347,6 +404,12 @@ def run_continuous(engine: InferenceEngine, reqs, sp, *, page_size,
         "prefill_chunks": m.prefill_chunks,
         "prefill_pad_frac": round(m.prefill_pad_frac, 3),
         "decode_idle_frac": round(m.decode_idle_frac, 3),
+        "mixed_iters": m.mixed_iters,
+        "dispatches_per_iter": round(m.dispatches_per_iter, 3),
+        "padded_token_frac": round(m.padded_token_frac, 3),
+        "host_s": round(m.host_s, 3),
+        "device_s": round(m.device_s, 3),
+        "host_frac": round(m.host_frac, 3),
         "prefill_tokens": m.prefill_tokens,
         "prefix_hit_rate": round(m.prefix_hit_rate, 3),
         "prefix_matched_tokens": m.prefix_matched_tokens,
@@ -461,10 +524,10 @@ def run_spec_leg(args, engine_factory, trace, sp, arrivals, baseline_reqs):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="unimo-text", choices=list_archs())
-    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--requests", type=int, default=128)
     ap.add_argument("--max-batch", type=int, default=8,
                     help="bucket batch size == continuous decode slots")
-    ap.add_argument("--max-new-tokens", type=int, default=48)
+    ap.add_argument("--max-new-tokens", type=int, default=64)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--num-pages", type=int, default=None,
@@ -630,6 +693,11 @@ def main():
         - pfx["prefill_tokens"],
         "outputs_identical_prefix_on_off": identical,
     }
+    # packed-vs-bucketed execution A/B on the unified scheduler: one
+    # (1, T) dispatch per iteration vs decode micro-step + per-chunk
+    # dispatches — bit-identical outputs, fewer dispatches, ~zero pad
+    report["packed"] = run_packed_ab(args, fresh_engine, trace, sp,
+                                     arrivals)
     if args.trace == "longprompt":
         report["longprompt"] = run_longprompt_ab(args, fresh_engine, trace,
                                                  sp, arrivals)

@@ -330,6 +330,34 @@ class MixedPlan:
 
 
 @dataclass
+class PackedBatch:
+    """One mixed iteration flattened into a single token-packed ragged
+    stream (decode tokens first, then prefill-chunk tokens, FCFS):
+    the device sees ONE (1, T) dispatch instead of a fused decode step
+    plus one padded forward per chunk.
+
+    Stream arrays are ``width`` long (the iteration's global bucket);
+    lanes past ``n_tokens`` are padding (slot_ids/positions -1, tokens
+    0).  Segment arrays are ``max_slots`` long: entry i describes the
+    i-th segment — its owning slot, stream offset, length, and the
+    stream index of its LAST real token (where sampling reads logits);
+    entries past ``n_segments`` carry seg_slots -1 / last_idx 0 and are
+    discarded host-side.  The first ``n_decode`` segments are decode
+    segments (1 token each), the rest are prefill chunks in plan order.
+    """
+    tokens: np.ndarray       # (T,) int32, 0-padded
+    slot_ids: np.ndarray     # (T,) int32, -1-padded
+    positions: np.ndarray    # (T,) int32 absolute, -1-padded
+    seg_slots: np.ndarray    # (S,) int32 owning slot, -1-padded
+    seg_start: np.ndarray    # (S,) int32 stream offset of the segment
+    seg_len: np.ndarray      # (S,) int32 real tokens in the segment
+    last_idx: np.ndarray     # (S,) int32 stream index of the last token
+    n_decode: int            # leading decode segments
+    n_segments: int          # live segments (decode + chunks)
+    n_tokens: int            # real lanes (== plan.total_tokens)
+
+
+@dataclass
 class ServeMetrics:
     """Per-run counters for the continuous path (the bench compares these
     against the bucket batcher's padding behaviour)."""
@@ -368,6 +396,13 @@ class ServeMetrics:
     prefill_chunks: int = 0          # prefill chunk rows scheduled
     ttft_s: List[float] = field(default_factory=list)   # submit->first tok
     itl_s: List[float] = field(default_factory=list)    # inter-token gaps
+    # -- packed execution (token-packed ragged iterations) ------------------
+    host_s: float = 0.0              # serve-loop wall time minus device time
+    device_s: float = 0.0            # time inside blocking device dispatches
+    mixed_iters: int = 0             # iterations that carried prefill chunks
+    mixed_dispatches: int = 0        # device dispatches those iterations made
+    packed_tokens_real: int = 0      # real lanes across packed dispatches
+    packed_tokens_padded: int = 0    # bucket lanes across packed dispatches
     # -- overload survivability (preemption + host KV tier) -----------------
     preemptions: int = 0             # slots evicted under pool pressure
     resumed: int = 0                 # preempted requests re-admitted
@@ -414,6 +449,32 @@ class ServeMetrics:
         """Fraction of prompt tokens served from the prefix cache."""
         total = self.prefix_matched_tokens + self.prefill_tokens
         return self.prefix_matched_tokens / total if total else 0.0
+
+    @property
+    def host_frac(self) -> float:
+        """Fraction of serve wall time spent OFF-device (host scheduling,
+        packing, bookkeeping) — the per-iteration overhead the packed
+        path attacks; 0 for runs that never dispatched."""
+        total = self.host_s + self.device_s
+        return self.host_s / total if total else 0.0
+
+    @property
+    def dispatches_per_iter(self) -> float:
+        """Mean device dispatches per MIXED iteration (iterations that
+        carried prefill chunks): 1.0 on the packed path, ``1 + #chunks``
+        (plus one for decode) on the bucketed mixed path; 0 when the run
+        never mixed (pure-decode traces)."""
+        if not self.mixed_iters:
+            return 0.0
+        return self.mixed_dispatches / self.mixed_iters
+
+    @property
+    def padded_token_frac(self) -> float:
+        """Fraction of packed-stream lanes that were bucket padding
+        (0 when the run never packed)."""
+        if not self.packed_tokens_padded:
+            return 0.0
+        return 1.0 - self.packed_tokens_real / self.packed_tokens_padded
 
     def percentile_latency(self, q: float) -> float:
         return float(np.percentile(self.latency_s, q)) if self.latency_s \
@@ -810,6 +871,54 @@ class ContinuousScheduler:
             rem -= c
         return MixedPlan(decode_slots=decode, chunks=chunks,
                          decode_cost=decode_cost)
+
+    def pack_batch(self, plan: MixedPlan, pending_tok, lengths,
+                   width: int) -> PackedBatch:
+        """Flatten a :meth:`next_batch` plan into one token-packed ragged
+        stream (:class:`PackedBatch`): decode segments first — slot s
+        contributes its pending token ``pending_tok[s]`` at position
+        ``lengths[s]`` — then each prefill chunk's prompt tokens, in plan
+        (FCFS) order.  ``width`` is the iteration's global stream-width
+        bucket; the caller picks it so ``plan.total_tokens <= width``.
+        Packing preserves the plan verbatim (budget, decode-first, FCFS
+        chunk order — property-tested), it only changes the layout the
+        device sees."""
+        assert plan.decode_cost == 1, \
+            "packed execution streams exactly one decode token per slot"
+        assert plan.total_tokens <= width, \
+            f"plan of {plan.total_tokens} tokens exceeds bucket {width}"
+        S = self.max_slots
+        tokens = np.zeros(width, np.int32)
+        slot_ids = np.full(width, -1, np.int32)
+        positions = np.full(width, -1, np.int32)
+        seg_slots = np.full(S, -1, np.int32)
+        seg_start = np.zeros(S, np.int32)
+        seg_len = np.zeros(S, np.int32)
+        last_idx = np.zeros(S, np.int32)
+        t = i = 0
+        for s in plan.decode_slots:
+            tokens[t] = pending_tok[s]
+            slot_ids[t] = s
+            positions[t] = lengths[s]
+            seg_slots[i], seg_start[i], seg_len[i], last_idx[i] = s, t, 1, t
+            t += 1
+            i += 1
+        for c in plan.chunks:
+            ctx = self.slots[c.slot].ctx
+            tokens[t:t + c.length] = ctx[c.start:c.start + c.length]
+            slot_ids[t:t + c.length] = c.slot
+            positions[t:t + c.length] = np.arange(c.start,
+                                                  c.start + c.length)
+            seg_slots[i], seg_start[i] = c.slot, t
+            seg_len[i], last_idx[i] = c.length, t + c.length - 1
+            t += c.length
+            i += 1
+        return PackedBatch(tokens=tokens, slot_ids=slot_ids,
+                           positions=positions, seg_slots=seg_slots,
+                           seg_start=seg_start, seg_len=seg_len,
+                           last_idx=last_idx,
+                           n_decode=len(plan.decode_slots),
+                           n_segments=i, n_tokens=t)
 
     def release_cow_source(self, st: SlotState) -> None:
         """Drop the pin on the COW source page once the engine has copied

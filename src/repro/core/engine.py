@@ -55,6 +55,20 @@ def mixed_width_buckets(budget: int) -> tuple:
                              4096) if w < budget) + (budget,)
 
 
+def packed_width_buckets(budget: int) -> tuple:
+    """Stream widths the packed (1, T) dispatch is traced at.  The
+    packed kernel only constrains T to multiples of its 8-lane query
+    tile, so the stream buckets far finer than the power-of-two chunk
+    widths: a <=32-shape ladder whose step scales with the budget keeps
+    padded lanes near the ladder-step remainder (under 10% of stream
+    lanes in steady state) without growing the compiled-shape count
+    unboundedly.  Exposed so benches can pre-warm every stream width."""
+    cap = -(-budget // 8) * 8                # budget, 8-lane aligned
+    step = max(8, -(-(cap // 32) // 8) * 8)  # ~cap/32, 8-lane aligned
+    return tuple(sorted({min(i * step, cap)
+                         for i in range(1, -(-cap // step) + 1)}))
+
+
 @dataclass
 class EngineStats:
     prefill_s: float = 0.0
@@ -500,6 +514,45 @@ class InferenceEngine:
         self._cont_cache[key] = fn
         return fn
 
+    def _packed_fns(self, sp: SamplingParams):
+        """Build (once per sp) the token-packed iteration entry point:
+        a WHOLE scheduler iteration — every decoding slot's token plus
+        every scheduled prefill-chunk token, flattened into one (1, T)
+        ragged stream — as ONE jitted dispatch.  Page resets and COW
+        tail copies for every admitting slot in the iteration are fused
+        in (dump-page no-ops otherwise), the stream's K/V is scattered
+        per-token into each lane's own slot pages, each query attends
+        its slot's paged history under its own causal mask
+        (``T.forward_packed``), and sampling runs fused on every
+        segment's last token.  Retraced once per global stream-width
+        bucket (:func:`packed_width_buckets`) — dispatches per mixed
+        iteration drop from ``1 + #chunks`` to exactly 1, and
+        padded-lane waste is the ladder-step remainder instead of
+        per-chunk width padding."""
+        key = ("packed", sp)
+        cached = self._cont_cache.get(key)
+        if cached is not None:
+            return cached
+        cfg, policy, max_len = self.cfg, self.policy, self.max_len
+
+        def packed_fn(params, tokens, slot_ids, positions, meta, seg_last,
+                      block_tables, reset_rows, cow_src, cow_dst, cow_keep,
+                      cache, rng):
+            cache = KV.reset_pages_all(cache, reset_rows)
+            cache = KV.copy_pages_all(cache, cow_src, cow_dst, cow_keep)
+            logits, cache = T.forward_packed(
+                params, cfg, tokens, cache, slot_ids, positions, seg_last,
+                policy=policy, max_len=max_len,
+                paged={"block_tables": block_tables, "packed_meta": meta})
+            rng, sub = jax.random.split(rng)
+            nxt = sample(logits[0], sub, sp)        # (S,)
+            return nxt, cache, rng
+
+        fn = jax.jit(packed_fn,
+                     donate_argnums=(11,) if self._donate else ())
+        self._cont_cache[key] = fn
+        return fn
+
     def _spec_fns(self, sp: SamplingParams, k: int):
         """Build (once per (sp, k)) the jitted draft-verify decode step:
         ONE target forward scores the pending token plus ``k`` drafted
@@ -577,6 +630,7 @@ class InferenceEngine:
                          spec: Optional[SpecConfig] = None,
                          max_batched_tokens: Optional[int] = None,
                          chunked_prefill: Optional[bool] = None,
+                         packed: Optional[bool] = None,
                          preemption: str = "off",
                          max_preemptions: int = 2,
                          host_kv_bytes: Optional[int] = None,
@@ -621,6 +675,21 @@ class InferenceEngine:
         Requests that arrive faster than slots/pages free up queue FCFS,
         exactly as before — the budget only reshapes *how* an admitted
         prompt's prefill is scheduled.
+
+        packed: token-packed ragged execution of mixed iterations.  The
+        iteration's decode tokens and prefill-chunk tokens are
+        flattened into one (1, T) stream (decode lanes first, then FCFS
+        chunks) and the whole iteration runs as ONE dispatch — per-token
+        KV scatter, per-segment causal attention against each lane's
+        own slot pages, fused sampling on every segment's last token.
+        T pads to one global bucket, so dispatches per mixed iteration
+        drop from ``1 + #chunks`` to 1 and padded-lane waste is the
+        bucket remainder rather than per-chunk width padding.  ``None``
+        (default) enables it whenever the unified chunked scheduler is
+        on (same family gate); False keeps the legacy
+        decode-micro-step + per-chunk dispatches (the A/B baseline);
+        True warns and falls back where chunking itself is unsupported.
+        Greedy outputs are bit-identical packed or bucketed.
 
 
         prefix_cache: share identical prompt-prefix pages across requests
@@ -752,12 +821,24 @@ class InferenceEngine:
                 # with the old store; preempt blobs never outlive a call
                 host = HostKVStore(hb)
                 ctx["host"] = host
-        mixed_fn = self._mixed_fns(sp) if chunked else None
+        # -- token-packed ragged execution ---------------------------------
+        packed_on = chunked if packed is None else bool(packed)
+        if packed_on and not chunked:
+            warnings.warn("packed execution requested but disabled — it "
+                          "rides the unified chunked scheduler"
+                          + (f" ({share_reason})"
+                             if share_reason is not None else ""))
+            packed_on = False
+        mixed_fn = self._mixed_fns(sp) if (chunked and not packed_on) \
+            else None
+        packed_fn = self._packed_fns(sp) if packed_on else None
         # the decode share of a mixed iteration is a single fused step
-        step_fn1 = self._continuous_fns(sp, 1)[2] if chunked else None
+        step_fn1 = self._continuous_fns(sp, 1)[2] \
+            if (chunked and not packed_on) else None
         # mixed forwards are traced per padded window width; bucket the
         # width so the compiled-shape set stays small and deterministic
         width_buckets = mixed_width_buckets(budget)
+        packed_buckets = packed_width_buckets(budget)
         admit_fn, admit_prefix_fn, step_fn = \
             self._continuous_fns(sp, steps_per_sync)
         buckets = self.prompt_buckets()
@@ -985,6 +1066,116 @@ class InferenceEngine:
                     st.last_token_at = now()
                     continue
                 first = int(nxt[0])
+                gen_budget = min(req.max_new_tokens, self.max_len - plen)
+                if first != EOS and gen_budget > 0:
+                    st.emitted.append(first)
+                    record_emit(st, 1, now())
+                if first == EOS or gen_budget <= 1:
+                    retire(c.slot)
+                else:
+                    tok[c.slot] = first
+                    lens[c.slot] = plen
+                    rem[c.slot] = gen_budget - 1
+                    act[c.slot] = True
+
+        def run_packed(plan):
+            """One token-packed ragged iteration: the WHOLE plan — every
+            decoding slot's token plus every scheduled prefill chunk —
+            as ONE (1, T) dispatch.  T buckets on the plan's real token
+            count (same width set the mixed forwards use), so the
+            compiled-shape set stays small while padded lanes are the
+            bucket remainder, not per-chunk width padding.  Greedy
+            bookkeeping after the dispatch replicates the bucketed
+            path's exactly (decode-step semantics for decode segments,
+            final-chunk sampling/resume semantics for chunk segments),
+            so outputs stay bit-identical between the two executions."""
+            nonlocal cache, rng
+            from repro.kernels import decode_attention as DA
+            W = pick_bucket(plan.total_tokens, packed_buckets)
+            pb = sched.pack_batch(plan, tok, lens, W)
+            reset_rows = np.full((slots, pages_per_slot), dump, np.int32)
+            cow_src = np.full((slots,), dump, np.int32)
+            cow_dst = np.full((slots,), dump, np.int32)
+            cow_keep = np.zeros((slots,), np.int32)
+            for c in plan.chunks:
+                st = sched.slots[c.slot]
+                if not st.needs_init:
+                    continue
+                reset_rows[c.slot, :len(st.fresh_pages)] = st.fresh_pages
+                if st.cow_src >= 0:
+                    # COW invariant: the destination must be private
+                    if sched.allocator.refcount(st.fresh_pages[0]) != 1:
+                        raise AssertionError(
+                            "COW write target is a shared page")
+                    cow_src[c.slot] = st.cow_src
+                    cow_dst[c.slot] = st.fresh_pages[0]
+                    cow_keep[c.slot] = st.matched_len
+                    metrics.cow_copies += 1
+            # static per-W work-table height: every segment adds at most
+            # one partial query block, so ceil-sum <= T/BQ + #segments
+            n_work = W // DA.PACKED_BLOCK_Q + slots
+            meta = DA.packed_meta_table(pb.seg_start[:pb.n_segments],
+                                        pb.seg_len[:pb.n_segments],
+                                        pb.seg_slots[:pb.n_segments],
+                                        W, n_work)
+            tm0 = time.perf_counter()
+            nxt, cache, rng = packed_fn(
+                self.params, jnp.asarray(pb.tokens[None, :]),
+                jnp.asarray(pb.slot_ids), jnp.asarray(pb.positions),
+                jnp.asarray(meta), jnp.asarray(pb.last_idx),
+                jnp.asarray(block_tables), jnp.asarray(reset_rows),
+                jnp.asarray(cow_src), jnp.asarray(cow_dst),
+                jnp.asarray(cow_keep), cache, rng)
+            nxt = np.asarray(jax.block_until_ready(nxt))
+            # one dispatch carries both shares; device_s sums both pools
+            stats.prefill_s += time.perf_counter() - tm0
+            metrics.steps += 1
+            metrics.slot_steps_total += slots
+            metrics.slot_steps_active += len(plan.decode_slots)
+            metrics.mixed_iters += 1
+            metrics.mixed_dispatches += 1
+            metrics.packed_tokens_real += pb.n_tokens
+            metrics.packed_tokens_padded += W
+            real = sum(c.length for c in plan.chunks)
+            metrics.prefill_chunks += len(plan.chunks)
+            metrics.prefill_tokens += real
+            metrics.prefill_padded += real   # pad is per-stream, not
+            t_emit = now()                   # per-chunk — see packed_*
+            for i in range(pb.n_decode):
+                s = int(pb.seg_slots[i])
+                st = sched.slots[s]
+                v = int(nxt[i])
+                lens[s] += 1
+                rem[s] -= 1
+                if v != EOS:
+                    st.emitted.append(v)
+                    record_emit(st, 1, t_emit)
+                    metrics.decode_tokens += 1
+                if v == EOS or rem[s] <= 0:
+                    retire(s)
+                else:
+                    tok[s] = v
+            for i in range(pb.n_decode, pb.n_segments):
+                c = plan.chunks[i - pb.n_decode]
+                st = sched.slots[c.slot]
+                req = st.request
+                if st.needs_init:
+                    st.needs_init = False
+                    sched.release_cow_source(st)
+                st.prefill_pos = c.start + c.length
+                if not st.prefill_done:
+                    continue
+                # final chunk: its segment's logits seeded sampling
+                plen = st.ctx_len
+                sched.insert_prefix(st, (plen // page_size) * page_size)
+                if st.is_resume:
+                    tok[c.slot] = st.resume_pending
+                    lens[c.slot] = plen
+                    rem[c.slot] = st.resume_rem
+                    act[c.slot] = True
+                    st.last_token_at = now()
+                    continue
+                first = int(nxt[i])
                 gen_budget = min(req.max_new_tokens, self.max_len - plen)
                 if first != EOS and gen_budget > 0:
                     st.emitted.append(first)
@@ -1258,7 +1449,15 @@ class InferenceEngine:
             if chunked:
                 plan = sched.next_batch(budget)
                 if plan.chunks:
+                    if packed_on:
+                        # token-packed ragged: the WHOLE iteration is
+                        # one (1, T) dispatch (accounted inside)
+                        run_packed(plan)
+                        continue
+                    metrics.mixed_iters += 1
+                    metrics.mixed_dispatches += len(plan.chunks)
                     if plan.decode_slots:
+                        metrics.mixed_dispatches += 1
                         decode_micro_step()
                     run_chunks(plan)
                     continue
@@ -1302,6 +1501,13 @@ class InferenceEngine:
                 metrics.slot_steps_active += int(acts.sum())
             apply_decode_results(tok_d, lens_d, rem_d, act_d, emits)
 
+        # host/device wall-time split for the whole run: device_s is the
+        # time spent inside (blocking) device dispatches, host_s is
+        # everything else — scheduling, packing, bookkeeping, idling for
+        # arrivals.  Mid-prompt chunk dispatches are async, so their
+        # device time books against whichever later dispatch blocks.
+        metrics.device_s = stats.prefill_s + stats.decode_s
+        metrics.host_s = max(0.0, now() - metrics.device_s)
         self.rng = rng
         ctx["cache"] = cache           # pool persists across serve calls
         if fault_hold:                 # release the injected squatter

@@ -391,6 +391,37 @@ def paged_write_decode_multi(cache: dict, new: dict, lengths, block_tables,
     return out
 
 
+def paged_write_packed(cache: dict, new: dict, slot_ids, positions,
+                       block_tables, *, ring_len: int) -> dict:
+    """Scatter a token-packed stream's K/V: token t of the flat stream
+    belongs to slot ``slot_ids[t]`` at absolute position ``positions[t]``
+    and lands in that slot's pages via ``block_tables``.
+
+    new: {"k"/"v": (1, T, H, D)}; slot_ids/positions: (T,) with -1 =
+    padding lane.  Like the speculative multi-write, positions at or
+    beyond ``ring_len`` are *dumped*, never wrapped — the packed path is
+    gated to non-windowed attention, so a wrap would only ever clobber
+    live context.  Padding lanes, unallocated pages and out-of-range
+    positions all route to the dump page.
+    """
+    out = dict(cache)
+    page = cache["ppos"].shape[1]
+    dump = cache["ppos"].shape[0] - 1
+    B = block_tables.shape[0]
+    ok = (slot_ids >= 0) & (positions >= 0) & (positions < ring_len)
+    rp = jnp.where(ok, positions, 0)
+    lp, off = rp // page, rp % page
+    safe_slot = jnp.clip(slot_ids, 0, B - 1)
+    phys = block_tables[safe_slot, lp]                          # (T,)
+    ok &= phys >= 0
+    phys = jnp.where(ok, phys, dump)
+    _scatter_kv(cache, out, {key: new[key][0] for key in ("k", "v")},
+                phys, off)                                      # (T, H, D)
+    out["ppos"] = cache["ppos"].at[phys, off].set(
+        jnp.where(ok, positions, -1))
+    return out
+
+
 def paged_truncate(cache, block_tables, keep_len) -> dict:
     """Rewind speculative writes: mark every entry of the slots' pages
     whose absolute position is >= ``keep_len[b]`` empty (pos = -1).

@@ -539,6 +539,282 @@ def paged_mixed_attention_q8(q, kpool, k_scale, vpool, v_scale, ppos,
 paged_verify_attention_q8 = paged_mixed_attention_q8
 
 
+PACKED_BLOCK_Q = 8
+# the whole (1, T, Hq, D[v]) query/output blocks stay VMEM-resident
+# (constant index maps), so T is capped by a VMEM budget, not the grid
+PACKED_VMEM_BYTES = 8 * 1024 * 1024
+
+
+def paged_packed_shape_supported(q, kpool, block_tables,
+                                 meta=None) -> bool:
+    _, T, Hq, D = q.shape
+    page, Hkv, Dv = kpool.shape[1], kpool.shape[2], kpool.shape[3]
+    return (q.shape[0] == 1 and T >= PACKED_BLOCK_Q
+            and T % PACKED_BLOCK_Q == 0 and Hq % Hkv == 0
+            and D % 8 == 0 and Dv % 8 == 0 and page % 8 == 0
+            and T * Hq * (D + Dv) * 4 <= PACKED_VMEM_BYTES)
+
+
+def packed_meta_table(seg_starts, seg_lengths, seg_slots, n_tokens,
+                      n_work):
+    """Host-side helper: cut each packed segment into PACKED_BLOCK_Q-wide
+    query windows and emit the (n_work, 4) int32 work table the packed
+    kernel walks — rows ``(slot, tile_start, win_start, win_end)`` in
+    global stream coordinates, where tile_start is the window's start
+    clamped to ``n_tokens - PACKED_BLOCK_Q`` so the fixed-width q tile
+    never reads past the stream.  Unused rows carry slot = -1 (fully
+    masked no-ops)."""
+    import numpy as np
+    bq = PACKED_BLOCK_Q
+    meta = np.full((n_work, 4), -1, np.int32)
+    meta[:, 1:] = 0
+    w = 0
+    for s0, ln, slot in zip(seg_starts, seg_lengths, seg_slots):
+        for blk in range(0, int(ln), bq):
+            ws = int(s0) + blk
+            we = min(int(s0) + int(ln), ws + bq)
+            meta[w] = (int(slot), min(ws, n_tokens - bq), ws, we)
+            w += 1
+    assert w <= n_work, "packed meta overflow: raise n_work"
+    return meta
+
+
+def _paged_packed_kernel(meta_ref, bt_ref, q_ref, k_ref, v_ref, kp_ref,
+                         qp_ref, o_ref, m_scr, l_scr, acc_scr, *, scale,
+                         attn_softcap, window, npages, g):
+    """Token-packed ragged variant of _paged_mixed_kernel: the grid's
+    first dim walks *query windows* of the flat (1, T) stream instead of
+    slots.  Work item w covers PACKED_BLOCK_Q stream lanes starting at
+    meta[w, 1]; only lanes inside [meta[w, 2], meta[w, 3]) belong to the
+    window's segment — the rest are masked off and their output lanes
+    preserved via a masked read-modify-write at finalize (grid items run
+    sequentially, and a lane's owning window is unique, so the RMW never
+    races).  The streamed pages are the *segment's slot's* pages
+    (meta[w, 0] indexes the block table); each query lane masks keys
+    against its own absolute position, so every token of every slot gets
+    its exact causal paged-attention in ONE kernel launch."""
+    w, j = pl.program_id(0), pl.program_id(1)
+    bq = PACKED_BLOCK_Q
+    slot = meta_ref[w, 0]
+    offc = meta_ref[w, 1]
+    ws = meta_ref[w, 2]
+    we = meta_ref[w, 3]
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, pl.ds(offc, bq)].astype(jnp.float32)      # (bq, Hq, D)
+    k = k_ref[0].astype(jnp.float32)                       # (page, Hkv, D)
+    v = v_ref[0].astype(jnp.float32)                       # (page, Hkv, Dv)
+    kp = kp_ref[0]                                         # (page,)
+    qp = qp_ref[0, pl.ds(offc, bq)]                        # (bq,)
+    _, Hq, D = q.shape
+    Hkv = k.shape[1]
+
+    lane = offc + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)[:, 0]
+    in_win = (lane >= ws) & (lane < we)
+    qp_eff = jnp.where(in_win, qp, -1)
+    allocated = (slot >= 0) & (bt_ref[jnp.maximum(slot, 0), j] >= 0)
+    mask = _mq_mask(kp, qp_eff, allocated, window)
+    qg = q.reshape(bq, Hkv, g, D).transpose(1, 0, 2, 3)    # (Hkv, bq, g, D)
+    _attend_block_mq(qg, k, v, mask, m_scr, l_scr, acc_scr, scale=scale,
+                     attn_softcap=attn_softcap)
+
+    @pl.when(j == npages - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-37)[..., None]
+        out = (acc_scr[...] / denom) \
+            .reshape(Hkv, bq, g, acc_scr.shape[-1]) \
+            .transpose(1, 0, 2, 3).reshape(bq, Hq, acc_scr.shape[-1])
+        old = o_ref[0, pl.ds(offc, bq)]
+        o_ref[0, pl.ds(offc, bq)] = jnp.where(
+            in_win[:, None, None], out.astype(o_ref.dtype), old)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "scale",
+                                             "attn_softcap", "interpret"))
+def paged_packed_attention(q, kpool, vpool, ppos, block_tables, q_pos,
+                           meta, *, window: Optional[int], scale: float,
+                           attn_softcap: Optional[float] = None,
+                           interpret: bool = False):
+    """Token-packed ragged attention over a paged KV pool: the whole
+    mixed iteration — every decode token and every prefill-chunk token of
+    every slot — as ONE (1, T) dispatch.
+
+    q: (1, T, Hq, D) flat token stream; q_pos: (1, T) absolute positions
+    (-1 = padding lane, comes back zeros); block_tables: (slots, npages);
+    meta: (n_work, 4) int32 work table from :func:`packed_meta_table`.
+    The stream's own K/V must already be in the pool (written by
+    ``kv_cache.paged_write_packed``); stored absolute positions give each
+    query its exact causal mask over its own slot's history, including
+    earlier tokens of its own chunk."""
+    _, T, Hq, D = q.shape
+    P, page, Hkv, Dv = vpool.shape
+    npages = block_tables.shape[1]
+    n_work = meta.shape[0]
+    g = Hq // Hkv
+    dump = P - 1
+    bq = PACKED_BLOCK_Q
+
+    def page_of(w, j, meta, bt):
+        slot = meta[w, 0]
+        pid = bt[jnp.maximum(slot, 0), j]
+        return jnp.where((slot < 0) | (pid < 0), dump, pid)
+
+    kernel = functools.partial(_paged_packed_kernel, scale=scale,
+                               attn_softcap=attn_softcap, window=window,
+                               npages=npages, g=g)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_work, npages),
+        in_specs=[
+            pl.BlockSpec((1, T, Hq, D), lambda w, j, meta, bt: (0, 0, 0, 0)),
+            pl.BlockSpec((1, page, Hkv, D),
+                         lambda w, j, meta, bt: (page_of(w, j, meta, bt),
+                                                 0, 0, 0)),
+            pl.BlockSpec((1, page, Hkv, Dv),
+                         lambda w, j, meta, bt: (page_of(w, j, meta, bt),
+                                                 0, 0, 0)),
+            pl.BlockSpec((1, page),
+                         lambda w, j, meta, bt: (page_of(w, j, meta, bt),
+                                                 0)),
+            pl.BlockSpec((1, T), lambda w, j, meta, bt: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, T, Hq, Dv),
+                               lambda w, j, meta, bt: (0, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Hkv, bq * g), jnp.float32),
+            pltpu.VMEM((Hkv, bq * g), jnp.float32),
+            pltpu.VMEM((Hkv, bq * g, Dv), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((1, T, Hq, Dv), q.dtype),
+        interpret=interpret,
+    )(meta, block_tables, q, kpool, vpool, ppos, q_pos)
+    # lanes no window owns (stream padding) are never written: zero them
+    return jnp.where((q_pos >= 0)[..., None, None], out, 0)
+
+
+def _paged_packed_kernel_q8(meta_ref, bt_ref, q_ref, k_ref, ks_ref, v_ref,
+                            vs_ref, kp_ref, qp_ref, o_ref, m_scr, l_scr,
+                            acc_scr, *, scale, attn_softcap, window,
+                            npages, g):
+    """Quantized-pool packed kernel: int8 page tiles + per-entry scale
+    rows dequantized in-register, feeding the same windowed
+    online-softmax body as _paged_packed_kernel."""
+    w, j = pl.program_id(0), pl.program_id(1)
+    bq = PACKED_BLOCK_Q
+    slot = meta_ref[w, 0]
+    offc = meta_ref[w, 1]
+    ws = meta_ref[w, 2]
+    we = meta_ref[w, 3]
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, pl.ds(offc, bq)].astype(jnp.float32)      # (bq, Hq, D)
+    k = k_ref[0].astype(jnp.float32) \
+        * ks_ref[0].astype(jnp.float32)[..., None]         # (page, Hkv, D)
+    v = v_ref[0].astype(jnp.float32) \
+        * vs_ref[0].astype(jnp.float32)[..., None]         # (page, Hkv, Dv)
+    kp = kp_ref[0]
+    qp = qp_ref[0, pl.ds(offc, bq)]
+    _, Hq, D = q.shape
+    Hkv = k.shape[1]
+
+    lane = offc + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)[:, 0]
+    in_win = (lane >= ws) & (lane < we)
+    qp_eff = jnp.where(in_win, qp, -1)
+    allocated = (slot >= 0) & (bt_ref[jnp.maximum(slot, 0), j] >= 0)
+    mask = _mq_mask(kp, qp_eff, allocated, window)
+    qg = q.reshape(bq, Hkv, g, D).transpose(1, 0, 2, 3)
+    _attend_block_mq(qg, k, v, mask, m_scr, l_scr, acc_scr, scale=scale,
+                     attn_softcap=attn_softcap)
+
+    @pl.when(j == npages - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-37)[..., None]
+        out = (acc_scr[...] / denom) \
+            .reshape(Hkv, bq, g, acc_scr.shape[-1]) \
+            .transpose(1, 0, 2, 3).reshape(bq, Hq, acc_scr.shape[-1])
+        old = o_ref[0, pl.ds(offc, bq)]
+        o_ref[0, pl.ds(offc, bq)] = jnp.where(
+            in_win[:, None, None], out.astype(o_ref.dtype), old)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "scale",
+                                             "attn_softcap", "interpret"))
+def paged_packed_attention_q8(q, kpool, k_scale, vpool, v_scale, ppos,
+                              block_tables, q_pos, meta, *,
+                              window: Optional[int], scale: float,
+                              attn_softcap: Optional[float] = None,
+                              interpret: bool = False):
+    """:func:`paged_packed_attention` over an int8-quantized pool (same
+    scale-pool contract as :func:`paged_decode_attention_q8`)."""
+    _, T, Hq, D = q.shape
+    P, page, Hkv, Dv = vpool.shape
+    npages = block_tables.shape[1]
+    n_work = meta.shape[0]
+    g = Hq // Hkv
+    dump = P - 1
+    bq = PACKED_BLOCK_Q
+
+    def page_of(w, j, meta, bt):
+        slot = meta[w, 0]
+        pid = bt[jnp.maximum(slot, 0), j]
+        return jnp.where((slot < 0) | (pid < 0), dump, pid)
+
+    kernel = functools.partial(_paged_packed_kernel_q8, scale=scale,
+                               attn_softcap=attn_softcap, window=window,
+                               npages=npages, g=g)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_work, npages),
+        in_specs=[
+            pl.BlockSpec((1, T, Hq, D), lambda w, j, meta, bt: (0, 0, 0, 0)),
+            pl.BlockSpec((1, page, Hkv, D),
+                         lambda w, j, meta, bt: (page_of(w, j, meta, bt),
+                                                 0, 0, 0)),
+            pl.BlockSpec((1, page, Hkv),
+                         lambda w, j, meta, bt: (page_of(w, j, meta, bt),
+                                                 0, 0)),
+            pl.BlockSpec((1, page, Hkv, Dv),
+                         lambda w, j, meta, bt: (page_of(w, j, meta, bt),
+                                                 0, 0, 0)),
+            pl.BlockSpec((1, page, Hkv),
+                         lambda w, j, meta, bt: (page_of(w, j, meta, bt),
+                                                 0, 0)),
+            pl.BlockSpec((1, page),
+                         lambda w, j, meta, bt: (page_of(w, j, meta, bt),
+                                                 0)),
+            pl.BlockSpec((1, T), lambda w, j, meta, bt: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, T, Hq, Dv),
+                               lambda w, j, meta, bt: (0, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Hkv, bq * g), jnp.float32),
+            pltpu.VMEM((Hkv, bq * g), jnp.float32),
+            pltpu.VMEM((Hkv, bq * g, Dv), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((1, T, Hq, Dv), q.dtype),
+        interpret=interpret,
+    )(meta, block_tables, q, kpool, k_scale, vpool, v_scale, ppos, q_pos)
+    return jnp.where((q_pos >= 0)[..., None, None], out, 0)
+
+
 @functools.partial(jax.jit, static_argnames=("window", "scale",
                                              "attn_softcap", "block_k",
                                              "interpret"))

@@ -110,6 +110,32 @@ def maybe_paged_mixed_attention(q, kpool, vpool, ppos, block_tables, q_pos,
 maybe_paged_verify_attention = maybe_paged_mixed_attention
 
 
+def maybe_paged_packed_attention(q, kpool, vpool, ppos, block_tables,
+                                 q_pos, meta, *, window, scale,
+                                 attn_softcap=None, k_scale=None,
+                                 v_scale=None):
+    """Token-packed ragged paged attention: q (1, T, Hq, D) is one flat
+    stream covering every slot's decode token and prefill-chunk tokens;
+    ``meta`` is the (n_work, 4) query-window table from
+    ``decode_attention.packed_meta_table``.  q_pos == -1 marks padding
+    lanes (zero outputs)."""
+    if _MODE == "off":
+        return None
+    from repro.kernels import decode_attention as DA
+    if meta is None or not DA.paged_packed_shape_supported(
+            q, kpool, block_tables):
+        return None
+    if k_scale is not None:
+        return DA.paged_packed_attention_q8(
+            q, kpool, k_scale, vpool, v_scale, ppos, block_tables, q_pos,
+            meta, window=window, scale=scale, attn_softcap=attn_softcap,
+            interpret=(_MODE == "interpret"))
+    return DA.paged_packed_attention(q, kpool, vpool, ppos, block_tables,
+                                     q_pos, meta, window=window,
+                                     scale=scale, attn_softcap=attn_softcap,
+                                     interpret=(_MODE == "interpret"))
+
+
 def maybe_rmsnorm(x, w):
     if _MODE == "off":
         return None

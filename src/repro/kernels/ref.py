@@ -85,6 +85,39 @@ def paged_mixed_attention_ref(q, kpool, vpool, ppos, block_tables, q_pos,
 paged_verify_attention_ref = paged_mixed_attention_ref
 
 
+def paged_packed_attention_ref(q, kpool, vpool, ppos, block_tables, q_pos,
+                               slot_ids, *, window: Optional[int],
+                               scale: float,
+                               attn_softcap: Optional[float] = None,
+                               k_scale=None, v_scale=None):
+    """Oracle for the token-packed ragged kernel: q (1, T, Hq, D) is one
+    flat stream where token t belongs to slot ``slot_ids[t]`` and attends
+    that slot's paged history only.  Gathers each *slot's* pages densely
+    once (exactly ``paged_gather``), then runs every stream token as its
+    own single-query attention against its slot's gathered context —
+    same key order and count per query as the bucketed per-slot
+    fallback, so greedy outputs stay bit-identical across the two paths.
+    Padding lanes (slot_ids == -1) come back as zeros."""
+    from repro.core.kv_cache import paged_gather
+    pool = {"pk": kpool, "pv": vpool, "ppos": ppos}
+    if k_scale is not None:
+        pool["pk_scale"] = k_scale
+        pool["pv_scale"] = v_scale
+    k, v, kp = paged_gather(pool, block_tables)     # (B, ctx, H, D)
+    B = block_tables.shape[0]
+    _, T, Hq, _ = q.shape
+    sid = slot_ids.reshape(T)
+    safe = jnp.clip(sid, 0, B - 1)
+    k_t = k[safe]                                   # (T, ctx, Hkv, D)
+    v_t = v[safe]
+    kp_t = jnp.where((sid >= 0)[:, None], kp[safe], -1)
+    out = decode_attention_ref(
+        q.reshape(T, 1, Hq, -1), k_t.astype(q.dtype), v_t.astype(q.dtype),
+        kp_t, q_pos.reshape(T, 1), window=window, scale=scale,
+        attn_softcap=attn_softcap)
+    return out.reshape(1, T, Hq, -1)
+
+
 def rmsnorm_ref(x, w, eps: float = 1e-6):
     dt = x.dtype
     xf = x.astype(jnp.float32)

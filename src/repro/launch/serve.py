@@ -102,6 +102,20 @@ def main():
                          "accounting every serve iteration")
     ap.add_argument("--prune-coverage", type=float, default=None,
                     help="e.g. 0.999 -> prune vocab to that corpus coverage")
+    ap.add_argument("--prune-vocab", type=int, default=None, metavar="N",
+                    help="prune the embedding/unembedding to the N most "
+                         "frequent corpus tokens (hard budget; mutually "
+                         "exclusive with --prune-coverage).  The engine "
+                         "remaps prompts at admission and unmaps results "
+                         "at emit, so callers see original token ids")
+    ap.add_argument("--packed", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="token-packed ragged execution of mixed "
+                         "iterations: the whole iteration (decode tokens "
+                         "+ prefill chunks) runs as ONE (1, T) dispatch "
+                         "(auto = on whenever chunked prefill is on; "
+                         "off = legacy decode-micro-step + per-chunk "
+                         "dispatches)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--max-len", type=int, default=256)
     args = ap.parse_args()
@@ -120,10 +134,14 @@ def main():
     texts = synthetic_corpus(args.requests, seed=7, min_len=4, max_len=40)
 
     maps = None
-    if args.prune_coverage:
+    if args.prune_coverage and args.prune_vocab:
+        raise SystemExit("--prune-coverage and --prune-vocab are mutually "
+                         "exclusive")
+    if args.prune_coverage or args.prune_vocab:
         freqs = tok.count_frequencies(corpus)
         params, cfg, maps = PR.prune_model(params, cfg, dict(freqs),
-                                           coverage=args.prune_coverage)
+                                           coverage=args.prune_coverage,
+                                           max_vocab=args.prune_vocab)
         print(f"pruned vocab -> {cfg.vocab_size}")
 
     engine = InferenceEngine(cfg, params, policy=policy,
@@ -144,6 +162,7 @@ def main():
         prefix = {"auto": None, "on": True, "off": False}[args.prefix_cache]
         chunked = {"auto": None, "on": True,
                    "off": False}[args.chunked_prefill]
+        packed = {"auto": None, "on": True, "off": False}[args.packed]
         spec = None
         if args.spec != "off":
             from repro.core.speculative import SpecConfig
@@ -155,7 +174,8 @@ def main():
             reqs, sp, page_size=args.page_size,
             steps_per_sync=args.steps_per_sync, prefix_cache=prefix,
             spec=spec, max_batched_tokens=args.max_batched_tokens,
-            chunked_prefill=chunked, preemption=args.preemption,
+            chunked_prefill=chunked, packed=packed,
+            preemption=args.preemption,
             host_kv_bytes=args.host_kv_bytes,
             debug_audit=args.debug_audit)
         dt = time.time() - t0
@@ -176,6 +196,11 @@ def main():
             "prefill_chunks": metrics.prefill_chunks,
             "decode_idle_frac": round(metrics.decode_idle_frac, 3),
             "prefill_pad_frac": round(metrics.prefill_pad_frac, 3),
+            "dispatches_per_iter": round(metrics.dispatches_per_iter, 3),
+            "padded_token_frac": round(metrics.padded_token_frac, 3),
+            "host_frac": round(metrics.host_frac, 3),
+            "host_s": round(metrics.host_s, 3),
+            "device_s": round(metrics.device_s, 3),
             "prefix_hit_rate": round(metrics.prefix_hit_rate, 3),
             "prefix_matched_tokens": metrics.prefix_matched_tokens,
             "pages_shared": metrics.pages_shared,

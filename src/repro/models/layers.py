@@ -182,6 +182,47 @@ def mha_attention_paged(q, pool, block_tables, q_pos, *,
                          attn_softcap=attn_softcap)
 
 
+def mha_attention_paged_packed(q, pool, block_tables, q_pos, slot_ids,
+                               meta, *, window: Optional[int], scale: float,
+                               attn_softcap: Optional[float] = None):
+    """Token-packed ragged attention against a paged KV pool: one flat
+    (1, T) query stream covering every slot's decode token and
+    prefill-chunk tokens for a whole scheduler iteration.
+
+    q: (1, T, Hq, D); q_pos: (1, T) absolute positions (-1 = padding
+    lane, output zeroed); slot_ids: (T,) owning slot per lane (-1 =
+    padding); meta: kernel work table from
+    ``decode_attention.packed_meta_table`` (may be None — fallback only);
+    block_tables: (slots, pages_per_slot).  The stream's own K/V must
+    already be in the pool (``kv_cache.paged_write_packed``).
+
+    Dispatch: packed Pallas kernel -> per-token dense gather + the same
+    ``mha_attention`` reference the bucketed per-slot fallback uses.
+    The fallback gathers each lane's *slot* context in block-table order,
+    so every query reduces over exactly the keys, in exactly the order,
+    the bucketed path would give it — greedy outputs stay bit-identical
+    across the packed and bucketed serving paths.
+    """
+    from repro.core import kv_cache as KV
+    from repro.kernels import ops as kops
+    out = kops.maybe_paged_packed_attention(
+        q, pool["pk"], pool["pv"], pool["ppos"], block_tables, q_pos,
+        meta, window=window, scale=scale, attn_softcap=attn_softcap,
+        k_scale=pool.get("pk_scale"), v_scale=pool.get("pv_scale"))
+    if out is not None:
+        return out
+    kk, vv, kp = KV.paged_gather(pool, block_tables)   # (slots, ctx, H, D)
+    B = block_tables.shape[0]
+    _, T, Hq, _ = q.shape
+    safe = jnp.clip(slot_ids, 0, B - 1)
+    kp_t = jnp.where((slot_ids >= 0)[:, None], kp[safe], -1)
+    out = mha_attention(q.reshape(T, 1, Hq, q.shape[-1]),
+                        kk[safe].astype(q.dtype), vv[safe].astype(q.dtype),
+                        q_pos.reshape(T, 1), kp_t, window=window,
+                        scale=scale, attn_softcap=attn_softcap)
+    return out.reshape(1, T, Hq, out.shape[-1])
+
+
 def position_mask(q_pos, k_pos, window: Optional[int]):
     """(B,Sq,Sk) bool: causal, windowed, and k_pos>=0 validity."""
     m = (k_pos[:, None, :] <= q_pos[:, :, None]) & (k_pos[:, None, :] >= 0)

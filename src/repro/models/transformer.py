@@ -160,15 +160,17 @@ def layer_apply(cfg: ModelConfig, spec: LayerSpec, p, x, *, positions,
     h = L.apply_norm(cfg, p["norm1"], x)
     new_cache = None
     is_paged = cache is not None and "pk" in cache
-    if mode == "verify" and (not is_paged or spec.mixer != ATTN):
-        # multi-token windows (speculative verify, chunked prefill) are
-        # defined only over paged pure-attention layers (the same
-        # families prefix sharing supports): ring layers cannot roll
-        # back overwrites, recurrent/MLA state has no per-position
-        # rewind and no legal mid-prompt chunk boundary.  The engine
-        # gates before dispatch; this is the backstop.
+    if mode in ("verify", "packed") and (not is_paged
+                                         or spec.mixer != ATTN):
+        # multi-token windows (speculative verify, chunked prefill, the
+        # token-packed ragged stream) are defined only over paged
+        # pure-attention layers (the same families prefix sharing
+        # supports): ring layers cannot roll back overwrites,
+        # recurrent/MLA state has no per-position rewind and no legal
+        # mid-prompt chunk boundary.  The engine gates before dispatch;
+        # this is the backstop.
         raise NotImplementedError(
-            f"verify mode is unsupported for layer family '{spec.mixer}' "
+            f"{mode} mode is unsupported for layer family '{spec.mixer}' "
             f"/ dense caches")
 
     # ----- mixer ----------------------------------------------------------
@@ -203,6 +205,18 @@ def layer_apply(cfg: ModelConfig, spec: LayerSpec, p, x, *, positions,
                     paged.get("active"), ring_len=ring)
                 ctx = L.mha_attention_paged(
                     q, c_attn, bt, positions, window=window, scale=scale,
+                    attn_softcap=cfg.attn_softcap)
+            elif mode == "packed":
+                # token-packed ragged stream: scatter every lane's K/V
+                # into its OWN slot's pages, then attend each lane to its
+                # slot's whole paged history (block tables are indexed
+                # per lane via slot_ids, not per row).
+                c_attn = KV.paged_write_packed(
+                    pool, {"k": k, "v": v}, paged["slot_ids"],
+                    positions[0], bt, ring_len=ring)
+                ctx = L.mha_attention_paged_packed(
+                    q, c_attn, bt, positions, paged["slot_ids"],
+                    paged.get("packed_meta"), window=window, scale=scale,
                     attn_softcap=cfg.attn_softcap)
             elif attend_cache or (quant and window is None):
                 # prefix-cached admission: the prompt's suffix is written
@@ -589,6 +603,53 @@ def forward_mixed(params, cfg: ModelConfig, tokens, cache, row_start, n_q, *,
     # same logits economy as forward_prefill(last_only=True)
     idx = jnp.maximum(n_q - 1, 0)
     x = jnp.take_along_axis(x, idx[:, None, None].astype(jnp.int32), axis=1)
+    h_final = L.apply_norm(cfg, params["final_norm"], x)
+    logits = policy.output_cast(L.unembed(cfg, params, h_final))
+    return logits, cache
+
+
+def forward_packed(params, cfg: ModelConfig, tokens, cache, slot_ids,
+                   positions, seg_last, *, policy: Policy = FP32,
+                   max_len: Optional[int] = None, paged=None):
+    """Token-packed ragged forward: a WHOLE scheduler iteration — every
+    live slot's decode token plus every admitting slot's prefill-chunk
+    tokens — as ONE (1, T) dispatch against the paged pool.
+
+    tokens: (1, T) flat stream (decode tokens first, then chunk tokens,
+    zero-padded to the width bucket); slot_ids: (T,) owning slot per
+    lane (-1 = padding); positions: (T,) absolute positions (-1 =
+    padding); seg_last: (S,) stream index of each segment's LAST real
+    token (one segment per decode slot, then one per chunk; padded
+    entries point at lane 0 and are discarded by the caller).
+
+    Generalizes :func:`forward_mixed` from per-slot rows to a flat
+    ragged stream: no per-chunk width buckets, no per-row padding —
+    the only padded lanes are the tail up to the single global bucket
+    T, so padded-FLOP waste is ~zero and the engine issues one dispatch
+    per iteration instead of ``1 + #chunks``.  K/V writes are scattered
+    per lane into each lane's own slot's pages
+    (``kv_cache.paged_write_packed``: quant-aware, dump-page routed for
+    padding, COW-safe because admission re-points fresh pages before
+    dispatch exactly as on the bucketed path), and each lane attends its
+    slot's whole paged history under its own causal mask.
+
+    Returns (logits (1, S, V) at each segment's last token, cache) —
+    decode segments read their next-token distribution, final chunks
+    seed sampling, earlier chunks are computed-and-discarded.  Gated
+    like verify/mixed to paged pure-attention families.
+    """
+    max_len = max_len or _cache_max_len(cfg, cache)
+    pos2 = positions[None, :]
+    paged = dict(paged or {})
+    paged["slot_ids"] = slot_ids
+    x = _embed(cfg, params, tokens, None, pos2, policy)
+    x, cache, _ = _run_all(cfg, params, x, positions=pos2, cache_pos=None,
+                           cache=cache, mode="packed", max_len=max_len,
+                           paged=paged)
+    # unembed only the sampled positions (forward_mixed's logits economy,
+    # one gather for all segments)
+    x = jnp.take_along_axis(x, seg_last[None, :, None].astype(jnp.int32),
+                            axis=1)
     h_final = L.apply_norm(cfg, params["final_norm"], x)
     logits = policy.output_cast(L.unembed(cfg, params, h_final))
     return logits, cache

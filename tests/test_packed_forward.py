@@ -1,0 +1,431 @@
+"""Token-packed ragged execution: one (1, T) dispatch per iteration.
+
+Contracts under test:
+
+  * the packed paged-attention kernel matches its oracle on ragged
+    multi-slot streams (decode lanes + prefill chunks in one (1, T)
+    dispatch), including int8 pools, sliding windows and logit
+    softcaps; padding lanes (q_pos == -1) come back exactly zero;
+  * ``forward_packed`` reproduces ``forward_decode`` /
+    ``forward_prefill`` logits for the same tokens — the whole
+    iteration flattens without changing any segment's math;
+  * ``pack_batch`` preserves the plan verbatim (budget ceiling,
+    decode-first layout, FCFS chunk order, contiguous per-segment
+    positions) — property-tested over random scheduler traces;
+  * greedy serving outputs are bit-identical between packed and
+    bucketed execution across plain, shared-prefix, int8, speculative
+    and preemption/resume serving, while packed runs make exactly ONE
+    device dispatch per mixed iteration;
+  * the new ServeMetrics derivations (host/device split, dispatches
+    per iteration, padded-token fraction) are zero-guarded.
+"""
+import copy
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_reduced
+from repro.core.continuous import (ContinuousScheduler, PageAllocator,
+                                   ServeMetrics)
+from repro.core.engine import InferenceEngine
+from repro.core.precision import FP32
+from repro.core.scheduler import Request
+from repro.kernels import decode_attention as DA
+from repro.kernels import ref as R
+from repro.models import transformer as T
+
+INT8 = dataclasses.replace(FP32, kv_dtype="int8")
+
+
+# ---------------------------------------------------------------------------
+# Packed paged-attention kernel vs oracle
+# ---------------------------------------------------------------------------
+
+
+def _packed_setup(rng, *, q8=False):
+    """Three slots' paged pools plus one packed stream over them:
+    a decode lane for slot 0, a 5-token chunk for slot 1 and a 6-token
+    chunk for slot 2, padded to T=16."""
+    B, P, page, npages, Hq, Hkv, D = 3, 10, 8, 3, 4, 2, 16
+    T_ = 16
+    ctx = [9, 14, 4]                   # already-stored context per slot
+    seg_len = [1, 5, 6]                # decode, chunk, chunk
+    if q8:
+        kpool = jnp.asarray(rng.integers(-127, 128, size=(P, page, Hkv, D)),
+                            jnp.int8)
+        vpool = jnp.asarray(rng.integers(-127, 128, size=(P, page, Hkv, D)),
+                            jnp.int8)
+        k_scale = jnp.asarray(rng.uniform(0.01, 0.1, size=(P, page, Hkv)),
+                              jnp.float32)
+        v_scale = jnp.asarray(rng.uniform(0.01, 0.1, size=(P, page, Hkv)),
+                              jnp.float32)
+    else:
+        kpool = jnp.asarray(rng.normal(size=(P, page, Hkv, D)), jnp.float32)
+        vpool = jnp.asarray(rng.normal(size=(P, page, Hkv, D)), jnp.float32)
+        k_scale = v_scale = None
+    ppos = np.full((P, page), -1, np.int32)
+    bt = np.full((B, npages), -1, np.int32)
+    perm = rng.permutation(P - 1)      # last page is the dump
+    nxt = 0
+    for b in range(B):
+        used = -(-(ctx[b] + seg_len[b]) // page)
+        bt[b, :used] = perm[nxt:nxt + used]
+        nxt += used
+        for t in range(ctx[b] + seg_len[b]):   # window K/V already written
+            ppos[bt[b, t // page], t % page] = t
+    slot_ids = np.full(T_, -1, np.int32)
+    q_pos = np.full(T_, -1, np.int32)
+    seg_start, t = [], 0
+    for b in range(B):
+        seg_start.append(t)
+        slot_ids[t:t + seg_len[b]] = b
+        q_pos[t:t + seg_len[b]] = ctx[b] + np.arange(seg_len[b])
+        t += seg_len[b]
+    meta = DA.packed_meta_table(np.asarray(seg_start, np.int32),
+                                np.asarray(seg_len, np.int32),
+                                np.arange(B, dtype=np.int32), T_,
+                                T_ // DA.PACKED_BLOCK_Q + B)
+    q = jnp.asarray(rng.normal(size=(1, T_, Hq, D)), jnp.float32)
+    return (q, kpool, vpool, jnp.asarray(ppos), jnp.asarray(bt),
+            jnp.asarray(q_pos[None, :]), jnp.asarray(slot_ids),
+            jnp.asarray(meta), k_scale, v_scale, D, t)
+
+
+@pytest.mark.parametrize("window,softcap", [(None, None), (None, 30.0),
+                                            (4, None)])
+def test_packed_kernel_vs_oracle(rng, window, softcap):
+    (q, kpool, vpool, ppos, bt, q_pos, slot_ids, meta,
+     _, _, D, n_real) = _packed_setup(rng)
+    assert DA.paged_packed_shape_supported(q, kpool, bt)
+    out = DA.paged_packed_attention(q, kpool, vpool, ppos, bt, q_pos, meta,
+                                    window=window, scale=D ** -0.5,
+                                    attn_softcap=softcap, interpret=True)
+    ref = R.paged_packed_attention_ref(q, kpool, vpool, ppos, bt, q_pos,
+                                       slot_ids, window=window,
+                                       scale=D ** -0.5, attn_softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    # padding lanes are exactly zero
+    assert not np.asarray(out[0, n_real:]).any()
+
+
+def test_packed_kernel_q8_vs_oracle(rng):
+    (q, kpool, vpool, ppos, bt, q_pos, slot_ids, meta,
+     k_scale, v_scale, D, n_real) = _packed_setup(rng, q8=True)
+    out = DA.paged_packed_attention_q8(q, kpool, k_scale, vpool, v_scale,
+                                       ppos, bt, q_pos, meta, window=None,
+                                       scale=D ** -0.5, interpret=True)
+    ref = R.paged_packed_attention_ref(q, kpool, vpool, ppos, bt, q_pos,
+                                       slot_ids, window=None,
+                                       scale=D ** -0.5, k_scale=k_scale,
+                                       v_scale=v_scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    assert not np.asarray(out[0, n_real:]).any()
+
+
+def test_packed_meta_table_tiles_segments():
+    """Every real lane lands in exactly one query window; unused rows
+    are slot -1; tile starts clamp into the padded stream."""
+    seg_start = np.asarray([0, 1, 6], np.int32)
+    seg_len = np.asarray([1, 5, 6], np.int32)
+    seg_slot = np.asarray([0, 1, 2], np.int32)
+    T_, bq = 16, DA.PACKED_BLOCK_Q
+    meta = DA.packed_meta_table(seg_start, seg_len, seg_slot, T_,
+                                T_ // bq + 3)
+    covered = np.zeros(T_, int)
+    for slot, tile, ws, we in meta:
+        if slot < 0:
+            assert (tile, ws, we) == (0, 0, 0)
+            continue
+        assert 0 <= tile <= T_ - bq                 # tile fits the stream
+        assert tile <= ws and we <= tile + bq       # window inside tile
+        covered[ws:we] += 1
+    assert (covered[:12] == 1).all()                # real lanes once each
+    assert (covered[12:] == 0).all()                # padding never covered
+
+
+# ---------------------------------------------------------------------------
+# forward_packed vs forward_decode / forward_prefill logits
+# ---------------------------------------------------------------------------
+
+
+def test_forward_packed_matches_decode_and_prefill(rng):
+    """One forward_packed stream carrying a decode lane (slot 0) and a
+    prefill-chunk segment (slot 1) reproduces forward_decode /
+    forward_prefill logits for the same tokens."""
+    from repro.core import kv_cache as KV
+    cfg = get_reduced("qwen3-4b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    page, npages, slots = 8, 8, 2
+    toks = [list(map(int, rng.integers(4, 400, size=9))),
+            list(map(int, rng.integers(4, 400, size=13)))]
+
+    def fresh():
+        return T.init_paged_cache(cfg, num_pages=npages, page_size=page,
+                                  max_slots=slots, max_len=48,
+                                  dtype=jnp.float32)
+
+    bt = np.full((slots, 6), -1, np.int32)
+    bt[0, :3] = [0, 1, 2]
+    bt[1, :3] = [3, 4, 5]
+    paged = {"block_tables": jnp.asarray(bt)}
+
+    # reference: slot 0 prefilled whole then one decode step; slot 1's
+    # whole-prompt last-token logits
+    cache = fresh()
+    tok0 = jnp.asarray([toks[0] + [0] * 7, toks[1] + [0] * 3], jnp.int32)
+    plens = jnp.asarray([9, 13], jnp.int32)
+    lg_p, cache = T.forward_prefill(
+        params, cfg, tok0, plens, cache, policy=FP32, max_len=48,
+        last_only=True, paged={**paged, "active": jnp.ones((2,), bool)})
+    nxt0 = int(jnp.argmax(lg_p[0, 0]))
+    lg_d, cache = T.forward_decode(
+        params, cfg, jnp.asarray([[nxt0], [0]], jnp.int32), cache,
+        jnp.asarray([9, 13], jnp.int32), policy=FP32, max_len=48,
+        paged={**paged, "active": jnp.asarray([True, False])})
+
+    # packed: slot 0 decode lane + slot 1's final 5-token chunk, one
+    # (1, 8) stream (first 8 of slot 1 pre-written by a prefix call)
+    cache2 = fresh()
+    _, cache2 = T.forward_prefill(
+        params, cfg, tok0, plens, cache2, policy=FP32, max_len=48,
+        last_only=True, paged={**paged, "active": jnp.ones((2,), bool)})
+    cache2 = KV.reset_pages_all(cache2, np.asarray(bt[1, :3]))
+    _, cache2 = T.forward_prefill(
+        params, cfg, jnp.asarray([toks[1][:8] + [0] * 5], jnp.int32),
+        jnp.asarray([8], jnp.int32), KV.slot_view(cache2, 1), policy=FP32,
+        max_len=48, last_only=True,
+        paged={"block_tables": jnp.asarray(bt[1:2]),
+               "active": jnp.ones((1,), bool)})
+    stream = np.zeros(8, np.int32)
+    stream[0] = nxt0
+    stream[1:6] = toks[1][8:]
+    slot_ids = np.asarray([0, 1, 1, 1, 1, 1, -1, -1], np.int32)
+    positions = np.asarray([9, 8, 9, 10, 11, 12, -1, -1], np.int32)
+    seg_last = np.asarray([0, 5], np.int32)
+    lg_pk, _ = T.forward_packed(
+        params, cfg, jnp.asarray(stream[None, :]), cache2,
+        jnp.asarray(slot_ids), jnp.asarray(positions),
+        jnp.asarray(seg_last), policy=FP32, max_len=48, paged=paged)
+    np.testing.assert_allclose(np.asarray(lg_pk[0, 0]),
+                               np.asarray(lg_d[0, 0]), rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(lg_pk[0, 1]),
+                               np.asarray(lg_p[1, 0]), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# pack_batch property tests: packing preserves the plan verbatim
+# ---------------------------------------------------------------------------
+
+
+def _pack_invariant_trace(seed: int):
+    rng = np.random.default_rng(seed)
+    slots = int(rng.integers(2, 6))
+    budget = int(rng.integers(slots, 40))
+    sched = ContinuousScheduler(slots, PageAllocator(64), page_size=8,
+                                max_pages_per_slot=16)
+    for uid in range(int(rng.integers(3, 12))):
+        sched.submit(Request(uid=uid,
+                             tokens=list(map(int, rng.integers(
+                                 1, 900, size=int(rng.integers(1, 50))))),
+                             max_new_tokens=int(rng.integers(1, 6))))
+    pending = rng.integers(1, 900, size=slots).astype(np.int32)
+    lengths = rng.integers(1, 64, size=slots).astype(np.int32)
+    iters = 0
+    while sched.has_work():
+        iters += 1
+        assert iters < 5000
+        while sched.try_admit() is not None:
+            pass
+        plan = sched.next_batch(budget)
+        width = max(8, 1 << (plan.total_tokens - 1).bit_length())
+        pb = sched.pack_batch(plan, pending, lengths, width)
+        # stream totals track the plan: budget is a hard ceiling
+        assert pb.n_tokens == plan.total_tokens <= budget
+        assert pb.n_segments == len(plan.decode_slots) + len(plan.chunks)
+        assert pb.n_decode == len(plan.decode_slots)
+        # decode lanes first, in plan order, one token each
+        for i, s in enumerate(plan.decode_slots):
+            assert pb.seg_slots[i] == s and pb.seg_len[i] == 1
+            assert pb.slot_ids[pb.seg_start[i]] == s
+            assert pb.tokens[pb.seg_start[i]] == pending[s]
+            assert pb.positions[pb.seg_start[i]] == lengths[s]
+        # then FCFS chunks, contiguous positions, prompt tokens verbatim
+        for j, c in enumerate(plan.chunks):
+            i = pb.n_decode + j
+            st = sched.slots[c.slot]
+            s0, ln = pb.seg_start[i], pb.seg_len[i]
+            assert pb.seg_slots[i] == c.slot and ln == c.length
+            assert pb.last_idx[i] == s0 + ln - 1
+            assert (pb.slot_ids[s0:s0 + ln] == c.slot).all()
+            np.testing.assert_array_equal(
+                pb.positions[s0:s0 + ln],
+                np.arange(c.start, c.start + c.length))
+            np.testing.assert_array_equal(
+                pb.tokens[s0:s0 + ln],
+                st.ctx[c.start:c.start + c.length])
+        # chunk segments keep admission (FCFS) order
+        seqs = [sched.slots[c.slot].admit_seq for c in plan.chunks]
+        assert seqs == sorted(seqs)
+        # segments are contiguous and padding lanes are inert
+        starts = [pb.seg_start[i] for i in range(pb.n_segments)]
+        assert starts == sorted(starts)
+        assert (pb.slot_ids[pb.n_tokens:] == -1).all()
+        assert (pb.positions[pb.n_tokens:] == -1).all()
+        for c in plan.chunks:                 # apply the plan
+            sched.slots[c.slot].prefill_pos += c.length
+        for s in plan.decode_slots:
+            st = sched.slots[s]
+            st.emitted.append(7)
+            if len(st.emitted) >= st.request.max_new_tokens:
+                sched.retire(s)
+    sched.allocator.check()
+
+
+def test_pack_batch_invariants_seeded():
+    for seed in range(50):
+        _pack_invariant_trace(seed)
+
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                           # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @settings(deadline=None, max_examples=50)
+    @given(st.integers(0, 10_000))
+    def test_pack_batch_invariants_hypothesis(seed):
+        _pack_invariant_trace(seed)
+
+
+# ---------------------------------------------------------------------------
+# Greedy parity sweep: packed == bucketed execution, one dispatch/iter
+# ---------------------------------------------------------------------------
+
+
+def _requests(rng, cfg, lens_new, prefix=None):
+    prefix = prefix or []
+    return [Request(uid=i,
+                    tokens=[2] + prefix + list(map(int, rng.integers(
+                        4, min(cfg.vocab_size, 400), size=ln))),
+                    max_new_tokens=mn)
+            for i, (ln, mn) in enumerate(lens_new)]
+
+
+def _serve(eng, reqs, **kw):
+    done, m = eng.serve_continuous(copy.deepcopy(reqs), page_size=8,
+                                   max_batched_tokens=16,
+                                   chunked_prefill=True, **kw)
+    return {r.uid: r.result for r in done}, m
+
+
+@pytest.mark.parametrize("mode", ["plain", "prefix", "int8", "spec",
+                                  "preempt"])
+def test_packed_vs_bucketed_bit_identical(rng, mode):
+    cfg = get_reduced("qwen3-4b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    policy = INT8 if mode == "int8" else FP32
+    prefix = list(map(int, rng.integers(4, 400, size=16))) \
+        if mode == "prefix" else None
+    shapes = [(14, 6), (25, 6), (9, 5), (19, 6)] if prefix \
+        else [(30, 6), (28, 6), (26, 5), (22, 6), (9, 5)]
+    reqs = _requests(rng, cfg, shapes, prefix=prefix)
+    kw = {}
+    if mode == "spec":
+        from repro.core.speculative import SpecConfig
+        kw["spec"] = SpecConfig(k=3, drafter="ngram")
+    if mode == "preempt":
+        kw.update(num_pages=11, preemption="lru", host_kv_bytes=1 << 30,
+                  debug_audit=True)
+
+    def eng():
+        return InferenceEngine(cfg, params, policy=policy, max_len=64,
+                               max_batch=3)
+
+    base, mb = _serve(eng(), reqs, packed=False, **kw)
+    done, mp = _serve(eng(), reqs, packed=True, **kw)
+    for uid, out in done.items():
+        assert out == base[uid], f"packed diverged ({mode}, uid {uid})"
+    # packed: exactly ONE device dispatch per mixed iteration; bucketed:
+    # one per chunk plus the decode micro-step
+    assert mp.mixed_iters > 0
+    assert mp.dispatches_per_iter == 1.0
+    assert mb.dispatches_per_iter > 1.0
+    assert 0.0 <= mp.padded_token_frac < 1.0
+    assert mp.packed_tokens_real > 0
+    assert mb.packed_tokens_real == 0      # bucketed leg never packs
+    if mode == "preempt":
+        assert mp.preemptions >= 1
+
+
+def test_packed_kernel_interpret_matches_fallback(rng):
+    """The packed Pallas kernel (interpret mode) must not change greedy
+    outputs vs the per-lane gather + jnp fallback."""
+    from repro.kernels import ops as KOPS
+    cfg = get_reduced("qwen3-4b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    reqs = _requests(rng, cfg, [(19, 4), (27, 4)])
+    base, _ = _serve(InferenceEngine(cfg, params, policy=FP32, max_len=64,
+                                     max_batch=2), reqs)
+    with KOPS.kernel_mode_ctx("interpret"):
+        done, _ = _serve(InferenceEngine(cfg, params, policy=FP32,
+                                         max_len=64, max_batch=2), reqs)
+    for uid, out in done.items():
+        assert out == base[uid]
+
+
+def test_packed_optout_without_chunking_warns(rng):
+    """packed=True on a family without chunked-prefill support warns
+    and serves bucketed, exactly."""
+    cfg = get_reduced("gemma2-2b")            # sliding-window ring
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    reqs = _requests(rng, cfg, [(9, 4), (17, 4)])
+    base, _ = InferenceEngine(cfg, params, policy=FP32, max_len=64,
+                              max_batch=2).serve_continuous(
+        copy.deepcopy(reqs), page_size=8, chunked_prefill=False)
+    base = {r.uid: r.result for r in base}
+    with pytest.warns(UserWarning, match="packed execution requested"):
+        done, m = InferenceEngine(cfg, params, policy=FP32, max_len=64,
+                                  max_batch=2).serve_continuous(
+            copy.deepcopy(reqs), page_size=8, packed=True)
+    assert m.scheduler == "bucketed" and m.packed_tokens_padded == 0
+    for r in done:
+        assert r.result == base[r.uid]
+
+
+# ---------------------------------------------------------------------------
+# Metrics: host/device split + packed derivations, zero-guarded
+# ---------------------------------------------------------------------------
+
+
+def test_packed_metrics_zero_guards():
+    m = ServeMetrics()
+    assert m.host_frac == 0.0
+    assert m.dispatches_per_iter == 0.0
+    assert m.padded_token_frac == 0.0
+
+
+def test_packed_metrics_derivations():
+    m = ServeMetrics(host_s=1.0, device_s=3.0, mixed_iters=4,
+                     mixed_dispatches=4, packed_tokens_real=90,
+                     packed_tokens_padded=100)
+    assert m.host_frac == pytest.approx(0.25)
+    assert m.dispatches_per_iter == 1.0
+    assert m.padded_token_frac == pytest.approx(0.1)
+
+
+def test_host_device_split_recorded(rng):
+    cfg = get_reduced("qwen3-4b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = InferenceEngine(cfg, params, policy=FP32, max_len=64, max_batch=2)
+    reqs = _requests(rng, cfg, [(9, 5), (21, 5)])
+    _, m = _serve(eng, reqs)
+    assert m.device_s > 0.0 and m.host_s >= 0.0
+    assert 0.0 <= m.host_frac < 1.0
