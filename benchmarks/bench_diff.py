@@ -1,0 +1,300 @@
+"""Bench regression gate: diff a fresh serving_bench report against a
+committed baseline JSON (BENCH_serving / BENCH_longprompt / BENCH_overload).
+
+Two families of checks:
+
+* **Invariants** run against the fresh report alone — correctness bits
+  (``outputs_identical_*``), structural guarantees (packed serving does
+  exactly one dispatch per mixed iteration), and bounded-waste ratios.
+  These must hold for *any* run shape, so they gate CI smokes whose
+  config differs from the committed baseline.
+* **Baseline-relative** checks compare fresh vs baseline numbers with a
+  per-metric tolerance.  Ratios of wall-clock measurements on shared CI
+  runners are noisy, so tolerances are deliberately loose (they catch
+  "packed serving got 2x slower", not 5% drift) — and they only run at
+  all when the run *config* matches the baseline's (same arch, request
+  count, slot count, max_new, trace shape).  A config mismatch is not a
+  failure: invariants still gate, relative checks are skipped and noted.
+
+Exit status 0 = all checks pass, 1 = at least one FAIL.  ``--verdict-out``
+writes a machine-readable verdict JSON with every check's outcome.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+# Run-shape keys that must match for baseline-relative comparisons to be
+# meaningful.  serving_bench stamps all of these at the top level.
+CONFIG_KEYS = ("arch", "requests", "slots", "max_new", "trace")
+
+_MISSING = object()
+
+
+def get_path(d: Dict[str, Any], path: str) -> Any:
+    """Walk a dot-separated path; returns _MISSING if any hop is absent."""
+    cur: Any = d
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return _MISSING
+        cur = cur[part]
+    return cur
+
+
+@dataclass
+class Check:
+    """One gate: an invariant on the fresh report, or a fresh-vs-baseline
+    comparison.
+
+    mode:
+      'true'      fresh value must be exactly True
+      'eq'        fresh value == ``value`` (within abs_tol for floats)
+      'ge'/'le'   fresh value >=/<= ``value``
+      'rel'       baseline-relative: fresh may degrade from baseline by at
+                  most ``base*rel_tol + abs_tol`` in the bad direction
+                  (``higher_better`` selects which direction is bad)
+    if_present: skip (not fail) when the path is absent from the fresh
+      report AND absent from the baseline; if the baseline has the section
+      but the fresh report lost it, that's a FAIL (a feature silently
+      dropped out of the bench).
+    """
+    path: str
+    mode: str
+    value: Any = None
+    rel_tol: float = 0.0
+    abs_tol: float = 0.0
+    higher_better: bool = True
+    if_present: bool = False
+
+
+def _fmt(v: Any) -> str:
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return repr(v)
+
+
+def run_check(c: Check, fresh: Dict[str, Any], baseline: Dict[str, Any],
+              config_match: bool) -> Dict[str, Any]:
+    fv = get_path(fresh, c.path)
+    bv = get_path(baseline, c.path)
+    out: Dict[str, Any] = {
+        "path": c.path, "mode": c.mode,
+        "baseline": None if bv is _MISSING else bv,
+        "fresh": None if fv is _MISSING else fv,
+    }
+
+    if c.mode == "rel":
+        if not config_match:
+            out.update(status="SKIP", note="config mismatch vs baseline; "
+                       "relative comparison not meaningful")
+            return out
+        if bv is _MISSING:
+            out.update(status="SKIP", note="metric absent from baseline")
+            return out
+        if fv is _MISSING:
+            out.update(status="FAIL", note="metric present in baseline but "
+                       "missing from fresh report")
+            return out
+        base = float(bv)
+        val = float(fv)
+        slack = abs(base) * c.rel_tol + c.abs_tol
+        if c.higher_better:
+            ok = val >= base - slack
+            note = (f"fresh {_fmt(val)} vs baseline {_fmt(base)} "
+                    f"(min allowed {_fmt(base - slack)})")
+        else:
+            ok = val <= base + slack
+            note = (f"fresh {_fmt(val)} vs baseline {_fmt(base)} "
+                    f"(max allowed {_fmt(base + slack)})")
+        out.update(status="PASS" if ok else "FAIL", note=note)
+        return out
+
+    # invariant modes evaluate the fresh report alone
+    if fv is _MISSING:
+        if c.if_present and bv is _MISSING:
+            out.update(status="SKIP", note="optional section not in this run")
+        elif c.if_present:
+            out.update(status="FAIL", note="section present in baseline but "
+                       "missing from fresh report")
+        else:
+            out.update(status="FAIL", note="required metric missing")
+        return out
+
+    if c.mode == "true":
+        ok = fv is True
+        note = f"expected True, got {_fmt(fv)}"
+    elif c.mode == "eq":
+        if isinstance(c.value, float) or isinstance(fv, float):
+            ok = abs(float(fv) - float(c.value)) <= max(c.abs_tol, 1e-9)
+        else:
+            ok = fv == c.value
+        note = f"expected == {_fmt(c.value)}, got {_fmt(fv)}"
+    elif c.mode == "ge":
+        ok = float(fv) >= float(c.value) - c.abs_tol
+        note = f"expected >= {_fmt(c.value)}, got {_fmt(fv)}"
+    elif c.mode == "le":
+        ok = float(fv) <= float(c.value) + c.abs_tol
+        note = f"expected <= {_fmt(c.value)}, got {_fmt(fv)}"
+    else:
+        raise ValueError(f"unknown check mode {c.mode!r}")
+    out.update(status="PASS" if ok else "FAIL", note=note)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Per-kind check specs.  Invariants first (always run), then relative
+# checks (run only on config match).
+# ---------------------------------------------------------------------------
+
+def checks_serving() -> List[Check]:
+    return [
+        # correctness invariants — the whole point of the bench A/Bs
+        Check("outputs_identical_prefix_on_off", "true"),
+        Check("packed.outputs_identical_packed_on_off", "true"),
+        Check("speculative.outputs_match_nonspec", "true", if_present=True),
+        Check("kv_sweep.int8_outputs_match_bf16", "true", if_present=True),
+        # structural: token packing really packs — one (1, T) dispatch per
+        # mixed iteration, and padding waste stays bounded
+        Check("packed.packed_on.dispatches_per_iter", "eq", value=1.0,
+              abs_tol=1e-6),
+        Check("packed.packed_on.padded_token_frac", "le", value=0.25),
+        Check("packed.packed_on.prefill_pad_frac", "eq", value=0.0,
+              abs_tol=1e-6),
+        # relative (config match only): loose — catch collapses, not drift
+        Check("continuous_speedup_tokens_per_s", "rel", rel_tol=0.5,
+              abs_tol=0.05, higher_better=True),
+        Check("packed.tokens_per_s_ratio", "rel", rel_tol=0.5,
+              abs_tol=0.05, higher_better=True),
+        Check("continuous_prefix.prefix_hit_rate", "rel", rel_tol=0.5,
+              abs_tol=0.01, higher_better=True),
+        Check("continuous.dispatches_per_iter", "rel", rel_tol=0.0,
+              abs_tol=1e-6, higher_better=False),
+    ]
+
+
+def checks_longprompt() -> List[Check]:
+    return [
+        Check("longprompt.outputs_identical_chunked_on_off", "true"),
+        Check("outputs_identical_prefix_on_off", "true"),
+        Check("packed.outputs_identical_packed_on_off", "true"),
+        # chunked prefill exists to bound decode stalls behind long
+        # prefills: tail ITL must improve vs the unchunked baseline
+        # (abs_tol mirrors the 1.1x jitter slack of the CI smoke gate)
+        Check("longprompt.itl_p99_improvement", "ge", value=1.0,
+              abs_tol=0.1),
+        Check("longprompt.chunked_on.dispatches_per_iter", "eq", value=1.0,
+              abs_tol=1e-6),
+        Check("longprompt.chunked_on.prefill_pad_frac", "eq", value=0.0,
+              abs_tol=1e-6),
+        Check("longprompt.chunked_on.padded_token_frac", "le", value=0.1),
+        # the structural win is ~4.5x locally; a collapse below ~20% of
+        # baseline signals a real regression even on noisy runners (the
+        # >= 1.0 invariant above still gates absolute correctness)
+        Check("longprompt.itl_p99_improvement", "rel", rel_tol=0.8,
+              abs_tol=0.25, higher_better=True),
+    ]
+
+
+def checks_overload() -> List[Check]:
+    return [
+        # survivability invariants: every request reaches a terminal
+        # state and contention never changes greedy outputs
+        Check("overload.all_terminal", "true"),
+        Check("overload.all_completed", "true"),
+        Check("overload.outputs_identical_contended", "true"),
+        # the contended leg must actually exercise the machinery
+        Check("overload.contended.preemptions", "ge", value=1),
+        Check("overload.contended.offloaded_pages", "ge", value=1),
+        Check("overload.contended.restored_pages", "ge", value=1),
+        Check("overload.contended.preemptions", "rel", rel_tol=1.0,
+              abs_tol=2, higher_better=False),
+    ]
+
+
+KIND_CHECKS = {
+    "serving": checks_serving,
+    "longprompt": checks_longprompt,
+    "overload": checks_overload,
+}
+
+
+def detect_kind(report: Dict[str, Any]) -> str:
+    if "overload" in report:
+        return "overload"
+    if "longprompt" in report:
+        return "longprompt"
+    return "serving"
+
+
+def diff(baseline: Dict[str, Any], fresh: Dict[str, Any],
+         kind: Optional[str] = None) -> Dict[str, Any]:
+    """Run all checks for ``kind`` (auto-detected from the fresh report
+    when None) and return the verdict dict."""
+    if kind is None or kind == "auto":
+        kind = detect_kind(fresh)
+    if kind not in KIND_CHECKS:
+        raise ValueError(f"unknown bench kind {kind!r}")
+    cfg_b = {k: baseline.get(k) for k in CONFIG_KEYS}
+    cfg_f = {k: fresh.get(k) for k in CONFIG_KEYS}
+    config_match = cfg_b == cfg_f
+    results = [run_check(c, fresh, baseline, config_match)
+               for c in KIND_CHECKS[kind]()]
+    n_fail = sum(1 for r in results if r["status"] == "FAIL")
+    return {
+        "kind": kind,
+        "config_match": config_match,
+        "baseline_config": cfg_b,
+        "fresh_config": cfg_f,
+        "pass": n_fail == 0,
+        "n_pass": sum(1 for r in results if r["status"] == "PASS"),
+        "n_fail": n_fail,
+        "n_skip": sum(1 for r in results if r["status"] == "SKIP"),
+        "checks": results,
+    }
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Diff a fresh serving_bench report against a committed "
+                    "baseline; exit 1 on regression.")
+    ap.add_argument("baseline", help="committed BENCH_*.json")
+    ap.add_argument("fresh", help="fresh serving_bench report JSON")
+    ap.add_argument("--kind", default="auto",
+                    choices=["auto", "serving", "longprompt", "overload"])
+    ap.add_argument("--verdict-out", default="",
+                    help="write machine-readable verdict JSON here")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+
+    verdict = diff(baseline, fresh, args.kind)
+
+    print(f"bench_diff [{verdict['kind']}] baseline={args.baseline} "
+          f"fresh={args.fresh}")
+    print(f"  config match: {verdict['config_match']} "
+          f"(relative checks {'enabled' if verdict['config_match'] else 'skipped'})")
+    for r in verdict["checks"]:
+        print(f"  [{r['status']:4s}] {r['mode']:4s} {r['path']}: {r['note']}")
+    print(f"  {verdict['n_pass']} pass, {verdict['n_fail']} fail, "
+          f"{verdict['n_skip']} skip")
+
+    if args.verdict_out:
+        with open(args.verdict_out, "w") as f:
+            json.dump(verdict, f, indent=2)
+        print(f"  wrote {args.verdict_out}")
+
+    if not verdict["pass"]:
+        print("REGRESSION: bench_diff failed")
+        return 1
+    print("OK: no regression detected")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -149,7 +149,8 @@ def build_overload_trace(n: int, seed: int, vocab: int, max_prompt: int,
     return reqs, arrivals
 
 
-def run_overload_ab(args, engine_factory, trace, sp, arrivals):
+def run_overload_ab(args, engine_factory, trace, sp, arrivals,
+                    tracer=None):
     """Serve the burst trace uncontended (pool = aggregate demand) and
     contended (pool ~1/3 of demand, LRU preemption + host KV tier,
     per-iteration audit on) and compare: the contended run must preempt
@@ -173,11 +174,14 @@ def run_overload_ab(args, engine_factory, trace, sp, arrivals):
                        max_batched_tokens=args.max_batched_tokens,
                        chunked_prefill=True, **kw)
         reqs = copy.deepcopy(trace)
+        # trace only the contended leg — the run the timeline is FOR
+        # (preempt/offload/restore events live there)
         legs[name] = run_continuous(
             eng, reqs, sp, page_size=ps,
             steps_per_sync=args.steps_per_sync, arrivals=arrivals,
             max_batched_tokens=args.max_batched_tokens,
-            chunked_prefill=True, **kw)
+            chunked_prefill=True,
+            tracer=tracer if name == "contended" else None, **kw)
         legs[name]["num_pages"] = kw["num_pages"]
         outs[name] = [r.result for r in reqs]
         outcomes[name] = [r.outcome for r in reqs]
@@ -197,7 +201,8 @@ def run_overload_ab(args, engine_factory, trace, sp, arrivals):
     }
 
 
-def run_longprompt_ab(args, engine_factory, trace, sp, arrivals):
+def run_longprompt_ab(args, engine_factory, trace, sp, arrivals,
+                      tracer=None):
     """Serve the longprompt trace with chunking OFF (bucketed
     whole-prompt admission) and ON (unified token-budget scheduler) and
     record the inter-token-latency tail each way — plus greedy parity,
@@ -238,11 +243,13 @@ def run_longprompt_ab(args, engine_factory, trace, sp, arrivals):
                     chunked_prefill=True, prefix_cache=False)
         eng.reset_prefix_cache()
         reqs = copy.deepcopy(trace)
+        # trace only the measured chunked_on leg (the configuration the
+        # timeline describes), never the warm-ups above
         legs[name] = run_continuous(
             eng, reqs, sp, page_size=args.page_size,
             num_pages=args.num_pages, steps_per_sync=args.steps_per_sync,
             arrivals=arrivals, max_batched_tokens=args.max_batched_tokens,
-            chunked_prefill=on)
+            chunked_prefill=on, tracer=tracer if on else None)
         outs[name] = [r.result for r in reqs]
     off_p99, on_p99 = (legs["chunked_off"]["itl_p99_s"],
                        legs["chunked_on"]["itl_p99_s"])
@@ -376,7 +383,8 @@ def run_continuous(engine: InferenceEngine, reqs, sp, *, page_size,
                    steps_per_sync, arrivals=None, prefix_cache=False,
                    num_pages=None, spec=None, max_batched_tokens=None,
                    chunked_prefill=None, packed=None, preemption="off",
-                   host_kv_bytes=None, debug_audit=False) -> dict:
+                   host_kv_bytes=None, debug_audit=False,
+                   tracer=None) -> dict:
     t0 = time.perf_counter()
     _, m = engine.serve_continuous(reqs, sp, page_size=page_size,
                                    num_pages=num_pages,
@@ -387,9 +395,9 @@ def run_continuous(engine: InferenceEngine, reqs, sp, *, page_size,
                                    chunked_prefill=chunked_prefill,
                                    packed=packed, preemption=preemption,
                                    host_kv_bytes=host_kv_bytes,
-                                   debug_audit=debug_audit)
+                                   debug_audit=debug_audit, trace=tracer)
     wall = time.perf_counter() - t0
-    return {
+    out = {
         "wall_s": round(wall, 3),
         "generated_tokens": m.generated_tokens,
         "tokens_per_s": round(m.generated_tokens / wall, 2),
@@ -437,6 +445,23 @@ def run_continuous(engine: InferenceEngine, reqs, sp, *, page_size,
         "acceptance_rate": round(m.acceptance_rate, 3),
         "tokens_per_forward": round(m.tokens_per_forward, 3),
     }
+    if tracer is not None:
+        # reconcile the per-iteration timeline against the end-of-run
+        # accounting: iteration device_s sums should match exactly (both
+        # sides sum the same spans); host_s misses only pre/post-loop
+        # setup, so its ratio is the acceptance gate's 5% check
+        it = [e for e in tracer.events if e["kind"] == "iteration"]
+        dev = sum(e["device_s"] for e in it)
+        hst = sum(e["host_s"] for e in it)
+        out["trace_iterations"] = len(it)
+        out["trace_events"] = len(tracer.events)
+        out["trace_device_span_s"] = round(dev, 4)
+        out["trace_host_span_s"] = round(hst, 4)
+        out["trace_device_recon"] = round(dev / m.device_s, 4) \
+            if m.device_s else 1.0
+        out["trace_host_recon"] = round(hst / m.host_s, 4) \
+            if m.host_s else 1.0
+    return out
 
 
 def run_kv_sweep(args, cfg, params, base_policy, trace, sp, arrivals):
@@ -521,6 +546,24 @@ def run_spec_leg(args, engine_factory, trace, sp, arrivals, baseline_reqs):
     return leg
 
 
+def finish_tracing(report, tracer, out_path, fmt):
+    """Export + schema-validate the measured run's trace and record the
+    verdict under report['tracing'] ('trace' already names the workload
+    shape)."""
+    from repro.core.trace import export, validate_events
+    errors = validate_events(tracer.events)
+    paths = export(tracer, out_path, fmt)
+    report["tracing"] = {
+        "events": len(tracer.events),
+        "dropped": tracer.dropped,
+        "schema_valid": not errors,
+        "errors": errors[:5],
+        "paths": paths,
+    }
+    for p in paths:
+        print(f"trace: {p}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="unimo-text", choices=list_archs())
@@ -584,8 +627,22 @@ def main():
     ap.add_argument("--suffix-max", type=int, default=12)
     ap.add_argument("--out", default="BENCH_serving.json",
                     help="machine-readable results path ('' to skip)")
+    ap.add_argument("--trace-out", default="",
+                    help="write a serve-loop trace of the final measured "
+                         "run of this shape (mixed/shared: the prefix "
+                         "leg; longprompt: the chunked_on leg; overload: "
+                         "the contended leg); '' = no tracing")
+    ap.add_argument("--trace-format", default="both",
+                    choices=["jsonl", "perfetto", "both"],
+                    help="trace export format (both = <base>.jsonl + "
+                         "<base>.perfetto.json)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    tracer = None
+    if args.trace_out:
+        from repro.core.trace import ServeTracer
+        tracer = ServeTracer()
 
     cfg = get_reduced(args.arch)
     policy = get_policy(args.policy)
@@ -613,8 +670,11 @@ def main():
             "slots": args.max_batch, "max_new": args.max_new_tokens,
             "trace": args.trace,
             "overload": run_overload_ab(args, fresh_engine, trace, sp,
-                                        ov_arrivals),
+                                        ov_arrivals, tracer=tracer),
         }
+        if tracer is not None:
+            finish_tracing(report, tracer, args.trace_out,
+                           args.trace_format)
         print(json.dumps(report, indent=2))
         if args.out:
             with open(args.out, "w") as f:
@@ -669,9 +729,13 @@ def main():
     # sharing observed below happens within the measured trace itself
     eng.reset_prefix_cache()
     pfx_reqs = copy.deepcopy(trace)
+    # the prefix leg is this shape's final measured full-stack run; on
+    # longprompt shapes the timeline belongs to the chunked_on A/B leg
     pfx = run_continuous(eng, pfx_reqs, sp, page_size=args.page_size, num_pages=args.num_pages,
                          steps_per_sync=args.steps_per_sync,
-                         arrivals=arrivals, prefix_cache=True)
+                         arrivals=arrivals, prefix_cache=True,
+                         tracer=tracer if args.trace != "longprompt"
+                         else None)
 
     identical = all(a.result == b.result
                     for a, b in zip(cont_reqs, pfx_reqs))
@@ -700,7 +764,8 @@ def main():
                                      arrivals)
     if args.trace == "longprompt":
         report["longprompt"] = run_longprompt_ab(args, fresh_engine, trace,
-                                                 sp, arrivals)
+                                                 sp, arrivals,
+                                                 tracer=tracer)
     if args.spec != "off":
         leg = run_spec_leg(args, fresh_engine, trace, sp, arrivals,
                            cont_reqs)
@@ -714,6 +779,8 @@ def main():
     if args.kv_sweep:
         report["kv_sweep"] = run_kv_sweep(args, cfg, params, policy,
                                           trace, sp, arrivals)
+    if tracer is not None:
+        finish_tracing(report, tracer, args.trace_out, args.trace_format)
     print(json.dumps(report, indent=2))
     if args.out:
         with open(args.out, "w") as f:

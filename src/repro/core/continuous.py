@@ -144,6 +144,7 @@ class HostKVStore:
         self.peak_bytes = 0
         self.spill_evictions = 0       # evictable entries dropped for room
         self.refused_puts = 0          # blobs that could not fit at all
+        self.trace = None              # optional ServeTracer (set per serve)
 
     def __contains__(self, key) -> bool:
         return key in self._entries
@@ -180,18 +181,26 @@ class HostKVStore:
             if nbytes > self.max_bytes:
                 if old is not None:        # replacement failed: entry gone
                     self.refused_puts += 1
+                    if self.trace is not None:
+                        self.trace.emit_now("host_refused", bytes=int(nbytes))
                     return False
                 self.refused_puts += 1
+                if self.trace is not None:
+                    self.trace.emit_now("host_refused", bytes=int(nbytes))
                 return False
             while self.used_bytes + nbytes > self.max_bytes:
                 victim = next((k for k, e in self._entries.items()
                                if e[2]), None)
                 if victim is None:
                     self.refused_puts += 1
+                    if self.trace is not None:
+                        self.trace.emit_now("host_refused", bytes=int(nbytes))
                     return False
                 _, vb, _ = self._entries.pop(victim)
                 self.used_bytes -= vb
                 self.spill_evictions += 1
+                if self.trace is not None:
+                    self.trace.emit_now("host_evict", bytes=int(vb))
         self._entries[key] = (blob, nbytes, evictable)
         self.used_bytes += nbytes
         self.peak_bytes = max(self.peak_bytes, self.used_bytes)
@@ -476,21 +485,29 @@ class ServeMetrics:
             return 0.0
         return 1.0 - self.packed_tokens_real / self.packed_tokens_padded
 
+    @staticmethod
+    def percentile(values, q: float) -> float:
+        """Zero-length-guarded percentile: the shared helper behind every
+        latency/TTFT/ITL quantile this struct reports.  Empty inputs give
+        0.0 (zero-token runs) instead of numpy's empty-slice warning."""
+        if len(values) == 0:
+            return 0.0
+        return float(np.percentile(np.asarray(values, dtype=np.float64), q))
+
     def percentile_latency(self, q: float) -> float:
-        return float(np.percentile(self.latency_s, q)) if self.latency_s \
-            else 0.0
+        return self.percentile(self.latency_s, q)
 
     def percentile_ttft(self, q: float) -> float:
         """Time-to-first-token percentile (submission -> first emitted
         token); 0 for zero-token runs."""
-        return float(np.percentile(self.ttft_s, q)) if self.ttft_s else 0.0
+        return self.percentile(self.ttft_s, q)
 
     def percentile_itl(self, q: float) -> float:
         """Inter-token-latency percentile over every emitted token after
         a slot's first (multi-token syncs spread their wall time evenly
         across the tokens they emitted); 0 for runs that never decoded
         past a first token."""
-        return float(np.percentile(self.itl_s, q)) if self.itl_s else 0.0
+        return self.percentile(self.itl_s, q)
 
     @property
     def ttft_p50(self) -> float:
@@ -507,6 +524,37 @@ class ServeMetrics:
     @property
     def itl_p99(self) -> float:
         return self.percentile_itl(99)
+
+    def to_dict(self, include_raw: bool = False) -> Dict[str, object]:
+        """Complete metrics dump: every counter field plus every derived
+        property (the quantities dashboards actually want), so consumers
+        of ``--metrics-json`` never re-derive rates by hand.  Raw
+        per-request sample lists are summarized as percentiles unless
+        ``include_raw`` is set."""
+        raw_lists = ("latency_s", "ttft_s", "itl_s")
+        d: Dict[str, object] = {}
+        for name in self.__dataclass_fields__:
+            if name in raw_lists and not include_raw:
+                continue
+            v = getattr(self, name)
+            d[name] = dict(v) if isinstance(v, dict) else v
+        d.update(
+            latency_p50=self.percentile_latency(50),
+            latency_p99=self.percentile_latency(99),
+            ttft_p50=self.ttft_p50,
+            ttft_p99=self.ttft_p99,
+            itl_p50=self.itl_p50,
+            itl_p99=self.itl_p99,
+            decode_idle_frac=self.decode_idle_frac,
+            acceptance_rate=self.acceptance_rate,
+            tokens_per_forward=self.tokens_per_forward,
+            prefill_pad_frac=self.prefill_pad_frac,
+            prefix_hit_rate=self.prefix_hit_rate,
+            host_frac=self.host_frac,
+            dispatches_per_iter=self.dispatches_per_iter,
+            padded_token_frac=self.padded_token_frac,
+        )
+        return d
 
 
 class ContinuousScheduler:
@@ -525,8 +573,10 @@ class ContinuousScheduler:
     def __init__(self, max_slots: int, allocator: PageAllocator,
                  page_size: int, max_pages_per_slot: Optional[int] = None,
                  prefix_cache=None, match_prefix: bool = True,
-                 preemption: str = "off", max_preemptions: int = 2):
+                 preemption: str = "off", max_preemptions: int = 2,
+                 trace=None):
         self.max_slots = max_slots
+        self.trace = trace             # optional ServeTracer (decision events)
         self.allocator = allocator
         self.page_size = page_size
         self.max_pages_per_slot = max_pages_per_slot
@@ -555,6 +605,11 @@ class ContinuousScheduler:
     def submit(self, req: Request, now: float = 0.0) -> None:
         self.waiting.append(req)
         self._submit_t[req.uid] = now
+        if self.trace is not None:
+            self.trace.emit("enqueue", t=now, uid=req.uid,
+                            prompt_len=req.prompt_len,
+                            max_new=req.max_new_tokens,
+                            deadline=req.deadline)
 
     def has_work(self) -> bool:
         return bool(self.waiting or self.slots)
@@ -630,6 +685,9 @@ class ContinuousScheduler:
                 continue
             self._finalize(req, status, detail, deadline_missed=missed)
             cancelled.append(req)
+            if self.trace is not None:
+                self.trace.emit("cancel", t=now, uid=req.uid,
+                                status=status, detail=detail)
         self.waiting = kept
         return cancelled
 
@@ -641,6 +699,9 @@ class ContinuousScheduler:
             return None
         req = self.waiting.pop(0)
         self._finalize(req, "rejected", detail)
+        if self.trace is not None:
+            self.trace.emit_now("cancel", uid=req.uid, status="rejected",
+                                detail=detail)
         return req
 
     # -- preemption ---------------------------------------------------------
@@ -753,6 +814,11 @@ class ContinuousScheduler:
             st.prefill_pos = pr.ctx_len    # KV comes back verbatim
             st.needs_init = False
         self.slots[slot] = st
+        if self.trace is not None:
+            self.trace.emit(
+                "admit", t=now, uid=req.uid, slot=slot, matched_tokens=0,
+                pages=len(pages),
+                resume="hostkv" if pr.blob is not None else "recompute")
         return slot, st
 
     def _promote(self, tokens: List[int], matched: int,
@@ -795,11 +861,20 @@ class ContinuousScheduler:
             return None
         free = self.free_slots()
         if not free:
+            if self.trace is not None:
+                self.trace.emit("admission_denied", t=now,
+                                uid=self.waiting[0].uid,
+                                reason="no_free_slot")
             return None
         req = self.waiting[0]
         pr = self._resume.get(req.uid)
         if pr is not None:
-            return self._try_resume(req, pr, free[0], now)
+            res = self._try_resume(req, pr, free[0], now)
+            if res is None and self.trace is not None:
+                self.trace.emit("admission_denied", t=now, uid=req.uid,
+                                reason="pool_exhausted_resume",
+                                pages_needed=pr.n_pages)
+            return res
         total = self.pages_needed(req)
         matched, mpages = (0, [])
         if self.match_prefix and req.prompt_len > 1:
@@ -827,6 +902,10 @@ class ContinuousScheduler:
                 self.allocator.decref(p)
             if cow_src >= 0:
                 self.allocator.decref(cow_src)
+            if self.trace is not None:
+                self.trace.emit("admission_denied", t=now, uid=req.uid,
+                                reason="pool_exhausted",
+                                pages_needed=total - shared)
             return None
         self.waiting.pop(0)
         slot = free[0]
@@ -839,6 +918,10 @@ class ContinuousScheduler:
         self._admit_seq += 1
         req.prefix_tokens_matched = matched
         self.slots[slot] = st
+        if self.trace is not None:
+            self.trace.emit("admit", t=now, uid=req.uid, slot=slot,
+                            matched_tokens=matched, pages=len(st.pages),
+                            resume="no")
         return slot, st
 
     # -- unified token-budget iteration planning ----------------------------

@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import time
 import warnings
+from contextlib import contextmanager
 from dataclasses import dataclass, field
 from typing import List, Optional
 
@@ -635,7 +636,8 @@ class InferenceEngine:
                          max_preemptions: int = 2,
                          host_kv_bytes: Optional[int] = None,
                          faults: Optional[FaultConfig] = None,
-                         debug_audit: bool = False):
+                         debug_audit: bool = False,
+                         trace=None):
         """Serve requests with continuous batching over a paged KV cache.
 
         Unlike :meth:`serve` (sort -> bucket -> drain), decode slots are
@@ -747,6 +749,19 @@ class InferenceEngine:
         :class:`~repro.core.continuous.FaultConfig`) and a per-iteration
         allocator + host-tier audit for the overload test harness.
 
+        trace: an optional :class:`~repro.core.trace.ServeTracer`.  When
+        attached, the serve loop emits a structured event timeline —
+        per-iteration records (budget use, decode lanes vs. chunk
+        segments, packed width/padding, host/device wall split, pool
+        gauges), request lifecycle events (enqueue → admit →
+        prefill_chunk → first_token → preempt/offload/restore → retire)
+        and scheduler decisions (admission denials, victim choices,
+        prefix/host-tier events) — and sources EVERY wall-clock reading
+        from the tracer's injectable clock, so a deterministic fake
+        clock yields byte-reproducible traces.  ``None`` (default) is
+        zero-cost: every emit site is guarded.  Greedy outputs are
+        bit-identical traced or not (tracing never touches device work).
+
         Returns (requests, ServeMetrics); ``r.result`` is filled like
         :meth:`serve`.
         """
@@ -857,7 +872,8 @@ class InferenceEngine:
                                     max_pages_per_slot=pages_per_slot,
                                     prefix_cache=trie, match_prefix=share,
                                     preemption=preemption,
-                                    max_preemptions=max_preemptions)
+                                    max_preemptions=max_preemptions,
+                                    trace=trace)
 
         # device closures for the host-side scheduler/trie: both always
         # see the *latest* cache pytree (restore rebinds it)
@@ -873,6 +889,11 @@ class InferenceEngine:
         sched.restore_fn = restore_fn
         trie.host_store = host
         trie.offload_fn = offload_fn if host is not None else None
+        # like offload_fn, the tracer must not outlive this call on the
+        # persistent trie/host objects (reset alongside it below)
+        trie.trace = trace
+        if host is not None:
+            host.trace = trace
         spill_base = trie.spilled_pages
         promote_base = sched.promoted_pages
         metrics = ServeMetrics(kv_dtype=ctx["kv_dtype"],
@@ -901,10 +922,58 @@ class InferenceEngine:
         incoming = [(arrivals[i] if arrivals else 0.0, requests[i])
                     for i in order]
         fault_hold: List[int] = []     # pool pages a fault is squatting on
-        t0 = time.perf_counter()
+        # with a tracer attached, EVERY wall reading this loop takes comes
+        # from its injectable clock — a deterministic fake clock therefore
+        # reproduces the exact event stream, timestamps included
+        tr = trace
+        clk = tr.clock if tr is not None else time.perf_counter
+        t0 = clk()
+        if tr is not None:
+            tr.set_origin(t0)
 
         def now():
-            return time.perf_counter() - t0
+            return clk() - t0
+
+        # per-iteration accounting for the trace timeline: device time
+        # accumulates across this iteration's spans, then one iteration
+        # record carries the host/device split + pool gauges
+        it_acc = {"t0": 0.0, "iter": 0, "device_s": 0.0}
+
+        @contextmanager
+        def dev_span(name, phase):
+            """Time one blocking device dispatch — books the wall into
+            ``stats.prefill_s``/``decode_s`` exactly like the inline
+            timers it replaces, plus (when tracing) a named device-track
+            span and the iteration's device share."""
+            ts = clk()
+            try:
+                yield
+            finally:
+                dt = clk() - ts
+                if phase == "prefill":
+                    stats.prefill_s += dt
+                else:
+                    stats.decode_s += dt
+                it_acc["device_s"] += dt
+                if tr is not None:
+                    tr.emit("span", t=ts - t0, name=name, dur=dt,
+                            track="device")
+
+        def emit_iteration(**kw):
+            dev = it_acc["device_s"]
+            it_acc["device_s"] = 0.0
+            it_acc["iter"] += 1
+            if tr is None:
+                return
+            t_it = it_acc["t0"]
+            dur = max(0.0, now() - t_it)
+            tr.emit("iteration", t=t_it, iter=it_acc["iter"] - 1, dur=dur,
+                    host_s=max(0.0, dur - dev), device_s=dev,
+                    budget=budget if chunked else 0,
+                    pages_in_use=int(sched.allocator.allocated_count),
+                    host_bytes=int(host.used_bytes) if host is not None
+                    else 0,
+                    trie_nodes=int(trie.num_nodes), **kw)
 
         def count_outcome(req):
             """Fold a request's terminal outcome into the run metrics —
@@ -928,6 +997,14 @@ class InferenceEngine:
             count_outcome(st.request)
             # queue wait counts: latency is submission -> completion
             metrics.latency_s.append(st.finished_at - st.submitted_at)
+            if tr is not None:
+                oc = st.request.outcome
+                tr.emit("retire", t=st.finished_at, uid=st.request.uid,
+                        slot=int(slot), status=oc.status,
+                        preemptions=int(oc.preemptions),
+                        deadline_missed=bool(oc.deadline_missed),
+                        latency_s=st.finished_at - st.submitted_at,
+                        generated=len(st.request.result))
 
         def record_emit(st, n, t):
             """TTFT / ITL bookkeeping: ``n`` tokens appended to ``st`` at
@@ -942,6 +1019,9 @@ class InferenceEngine:
                 # final-chunk sample: it defines TTFT and no ITL gap
                 assert n == 1, "first emission must be a single token"
                 metrics.ttft_s.append(t - st.submitted_at)
+                if tr is not None:
+                    tr.emit("first_token", t=t, uid=st.request.uid,
+                            ttft_s=t - st.submitted_at)
             else:
                 metrics.itl_s.extend([(t - st.last_token_at) / n] * n)
             st.last_token_at = t
@@ -976,14 +1056,13 @@ class InferenceEngine:
             budget cost is exactly one token, so admitting prompts can
             never starve decode)."""
             nonlocal cache, rng
-            td = time.perf_counter()
-            (tok_d, lens_d, rem_d, act_d, cache, rng, emits,
-             acts) = step_fn1(self.params, jnp.asarray(tok),
-                              jnp.asarray(lens), jnp.asarray(rem),
-                              jnp.asarray(act),
-                              jnp.asarray(block_tables), cache, rng)
-            emits = np.asarray(jax.block_until_ready(emits))
-            stats.decode_s += time.perf_counter() - td
+            with dev_span("decode_micro", "decode"):
+                (tok_d, lens_d, rem_d, act_d, cache, rng, emits,
+                 acts) = step_fn1(self.params, jnp.asarray(tok),
+                                  jnp.asarray(lens), jnp.asarray(rem),
+                                  jnp.asarray(act),
+                                  jnp.asarray(block_tables), cache, rng)
+                emits = np.asarray(jax.block_until_ready(emits))
             metrics.steps += 1
             metrics.slot_steps_total += slots
             metrics.slot_steps_active += int(np.asarray(acts).sum())
@@ -997,8 +1076,11 @@ class InferenceEngine:
             token count — decode rows never pad chunk-wide, chunk rows
             never pad slot-deep.  Chunk dispatches are (1, W-bucket)
             shaped: a small deterministic trace set regardless of how
-            arrival timing slices the prompts."""
+            arrival timing slices the prompts.  Returns the total padded
+            lanes across this plan's chunk dispatches (the iteration
+            record's ``padded_lanes``)."""
             nonlocal cache, rng
+            padded = 0
             for c in plan.chunks:
                 st = sched.slots[c.slot]
                 req = st.request
@@ -1022,23 +1104,28 @@ class InferenceEngine:
                         cow_dst[0] = st.fresh_pages[0]
                         cow_keep[0] = st.matched_len
                         metrics.cow_copies += 1
-                tm0 = time.perf_counter()
-                nxt, cache, rng = mixed_fn(
-                    self.params, jnp.asarray(toks),
-                    jnp.asarray([c.start], jnp.int32),
-                    jnp.asarray([c.length], jnp.int32),
-                    jnp.asarray(block_tables[c.slot:c.slot + 1]),
-                    jnp.asarray(reset_row), jnp.asarray(cow_src),
-                    jnp.asarray(cow_dst), jnp.asarray(cow_keep), cache,
-                    rng)
-                # only a prompt's FINAL chunk consumes its sampled token;
-                # mid-prompt chunks stay async (no host sync), so the
-                # dispatch pipeline keeps flowing — prefill_s then books
-                # a mid-prompt chunk's device time against whichever
-                # later dispatch blocks on it
-                if c.start + c.length >= st.ctx_len and not st.is_resume:
-                    nxt = np.asarray(jax.block_until_ready(nxt))
-                stats.prefill_s += time.perf_counter() - tm0
+                with dev_span("chunk", "prefill"):
+                    nxt, cache, rng = mixed_fn(
+                        self.params, jnp.asarray(toks),
+                        jnp.asarray([c.start], jnp.int32),
+                        jnp.asarray([c.length], jnp.int32),
+                        jnp.asarray(block_tables[c.slot:c.slot + 1]),
+                        jnp.asarray(reset_row), jnp.asarray(cow_src),
+                        jnp.asarray(cow_dst), jnp.asarray(cow_keep), cache,
+                        rng)
+                    # only a prompt's FINAL chunk consumes its sampled
+                    # token; mid-prompt chunks stay async (no host sync),
+                    # so the dispatch pipeline keeps flowing — prefill_s
+                    # then books a mid-prompt chunk's device time against
+                    # whichever later dispatch blocks on it
+                    if c.start + c.length >= st.ctx_len \
+                            and not st.is_resume:
+                        nxt = np.asarray(jax.block_until_ready(nxt))
+                if tr is not None:
+                    tr.emit_now("prefill_chunk", uid=req.uid,
+                                slot=int(c.slot), start=int(c.start),
+                                len=int(c.length))
+                padded += W - c.length
                 metrics.prefill_chunks += 1
                 metrics.prefill_tokens += c.length
                 metrics.prefill_padded += W
@@ -1077,6 +1164,7 @@ class InferenceEngine:
                     lens[c.slot] = plen
                     rem[c.slot] = gen_budget - 1
                     act[c.slot] = True
+            return padded
 
         def run_packed(plan):
             """One token-packed ragged iteration: the WHOLE plan — every
@@ -1118,17 +1206,16 @@ class InferenceEngine:
                                         pb.seg_len[:pb.n_segments],
                                         pb.seg_slots[:pb.n_segments],
                                         W, n_work)
-            tm0 = time.perf_counter()
-            nxt, cache, rng = packed_fn(
-                self.params, jnp.asarray(pb.tokens[None, :]),
-                jnp.asarray(pb.slot_ids), jnp.asarray(pb.positions),
-                jnp.asarray(meta), jnp.asarray(pb.last_idx),
-                jnp.asarray(block_tables), jnp.asarray(reset_rows),
-                jnp.asarray(cow_src), jnp.asarray(cow_dst),
-                jnp.asarray(cow_keep), cache, rng)
-            nxt = np.asarray(jax.block_until_ready(nxt))
             # one dispatch carries both shares; device_s sums both pools
-            stats.prefill_s += time.perf_counter() - tm0
+            with dev_span("packed", "prefill"):
+                nxt, cache, rng = packed_fn(
+                    self.params, jnp.asarray(pb.tokens[None, :]),
+                    jnp.asarray(pb.slot_ids), jnp.asarray(pb.positions),
+                    jnp.asarray(meta), jnp.asarray(pb.last_idx),
+                    jnp.asarray(block_tables), jnp.asarray(reset_rows),
+                    jnp.asarray(cow_src), jnp.asarray(cow_dst),
+                    jnp.asarray(cow_keep), cache, rng)
+                nxt = np.asarray(jax.block_until_ready(nxt))
             metrics.steps += 1
             metrics.slot_steps_total += slots
             metrics.slot_steps_active += len(plan.decode_slots)
@@ -1159,6 +1246,10 @@ class InferenceEngine:
                 c = plan.chunks[i - pb.n_decode]
                 st = sched.slots[c.slot]
                 req = st.request
+                if tr is not None:
+                    tr.emit("prefill_chunk", t=t_emit, uid=req.uid,
+                            slot=int(c.slot), start=int(c.start),
+                            len=int(c.length))
                 if st.needs_init:
                     st.needs_init = False
                     sched.release_cow_source(st)
@@ -1187,8 +1278,15 @@ class InferenceEngine:
                     lens[c.slot] = plen
                     rem[c.slot] = gen_budget - 1
                     act[c.slot] = True
+            emit_iteration(budget_used=int(pb.n_tokens),
+                           decode_lanes=len(plan.decode_slots),
+                           chunk_segments=len(plan.chunks),
+                           chunk_tokens=int(real), width_bucket=int(W),
+                           padded_lanes=int(W - pb.n_tokens), idle=False)
 
         while incoming or sched.has_work():
+            if tr is not None:
+                it_acc["t0"] = now()
             # -- release arrived requests into the FCFS queue -------------
             while incoming and incoming[0][0] <= now():
                 _, req = incoming.pop(0)
@@ -1251,16 +1349,30 @@ class InferenceEngine:
                             rem[slot] = st.resume_rem
                             act[slot] = True
                             st.last_token_at = now()
+                            if tr is not None:
+                                tr.emit_now("restore", uid=st.request.uid,
+                                            slot=int(slot), mode="hostkv",
+                                            n_pages=len(st.pages))
                         elif st.is_resume:
                             # host tier was full: re-prefill the context
                             # as ordinary chunks (recompute-resume)
                             metrics.resumed += 1
+                            if tr is not None:
+                                tr.emit_now("restore", uid=st.request.uid,
+                                            slot=int(slot),
+                                            mode="recompute",
+                                            n_pages=len(st.pages))
                         else:
                             stats.prompt_tokens += st.request.prompt_len
                             metrics.admitted += 1
                             metrics.prefix_hits += st.matched_len > 0
                             metrics.prefix_matched_tokens += st.matched_len
                             metrics.pages_shared += st.shared_count
+                            if tr is not None and st.matched_len > 0:
+                                tr.emit_now(
+                                    "prefix_hit", uid=st.request.uid,
+                                    matched_tokens=int(st.matched_len),
+                                    pages_shared=int(st.shared_count))
                         continue
                     # admission failed: preempt a decoding victim for the
                     # blocked head — only when a slot is FREE (pure pool
@@ -1278,6 +1390,7 @@ class InferenceEngine:
                     if victim is None:
                         break
                     n_pages = len(sched.slots[victim].pages)
+                    vic_uid = sched.slots[victim].request.uid
                     _, offloaded = sched.preempt(
                         victim, pending=int(tok[victim]),
                         ctx_len=int(lens[victim]),
@@ -1287,6 +1400,15 @@ class InferenceEngine:
                     metrics.preemptions += 1
                     if offloaded:
                         metrics.offloaded_pages += n_pages
+                    if tr is not None:
+                        tr.emit_now("preempt", uid=int(vic_uid),
+                                    slot=int(victim), policy=preemption,
+                                    n_pages=int(n_pages),
+                                    offloaded=bool(offloaded))
+                        if offloaded:
+                            tr.emit_now("offload", uid=int(vic_uid),
+                                        slot=int(victim),
+                                        n_pages=int(n_pages))
                 metrics.peak_pages_in_use = max(
                     metrics.peak_pages_in_use,
                     sched.allocator.allocated_count)
@@ -1339,21 +1461,22 @@ class InferenceEngine:
                         cow_dst[i] = st.fresh_pages[0]
                         cow_keep[i] = m
                         metrics.cow_copies += 1
-                tp0 = time.perf_counter()
-                if share:
-                    first, cache, rng = admit_prefix_fn(
-                        self.params, jnp.asarray(toks), jnp.asarray(plens),
-                        jnp.asarray(starts), jnp.asarray(slots_arr),
-                        jnp.asarray(rows), jnp.asarray(pages_arr),
-                        jnp.asarray(cow_src), jnp.asarray(cow_dst),
-                        jnp.asarray(cow_keep), cache, rng)
-                else:
-                    first, cache, rng = admit_fn(
-                        self.params, jnp.asarray(toks), jnp.asarray(plens),
-                        jnp.asarray(slots_arr), jnp.asarray(rows),
-                        jnp.asarray(pages_arr), cache, rng)
-                first = np.asarray(jax.block_until_ready(first))
-                stats.prefill_s += time.perf_counter() - tp0
+                with dev_span("admit_prefill", "prefill"):
+                    if share:
+                        first, cache, rng = admit_prefix_fn(
+                            self.params, jnp.asarray(toks),
+                            jnp.asarray(plens),
+                            jnp.asarray(starts), jnp.asarray(slots_arr),
+                            jnp.asarray(rows), jnp.asarray(pages_arr),
+                            jnp.asarray(cow_src), jnp.asarray(cow_dst),
+                            jnp.asarray(cow_keep), cache, rng)
+                    else:
+                        first, cache, rng = admit_fn(
+                            self.params, jnp.asarray(toks),
+                            jnp.asarray(plens),
+                            jnp.asarray(slots_arr), jnp.asarray(rows),
+                            jnp.asarray(pages_arr), cache, rng)
+                    first = np.asarray(jax.block_until_ready(first))
                 t_adm = now()
                 for i, (slot, st, _) in enumerate(chunk):
                     req = st.request
@@ -1368,6 +1491,14 @@ class InferenceEngine:
                     metrics.prefix_hits += st.matched_len > 0
                     metrics.prefix_matched_tokens += st.matched_len
                     metrics.pages_shared += st.shared_count
+                    if tr is not None:
+                        tr.emit("prefill_chunk", t=t_adm, uid=req.uid,
+                                slot=int(slot), start=int(st.matched_len),
+                                len=int(plen - st.matched_len))
+                        if st.matched_len > 0:
+                            tr.emit("prefix_hit", t=t_adm, uid=req.uid,
+                                    matched_tokens=int(st.matched_len),
+                                    pages_shared=int(st.shared_count))
                     # newly produced page-aligned prompt KV joins the trie
                     # now (the partial tail joins at retire, once decode
                     # can no longer write into it)
@@ -1435,9 +1566,16 @@ class InferenceEngine:
                         f"request {head.uid}: {detail}; rejecting")
                     req = sched.fail_head(detail)
                     count_outcome(req)
+                    emit_iteration(budget_used=0, decode_lanes=0,
+                                   chunk_segments=0, chunk_tokens=0,
+                                   width_bucket=0, padded_lanes=0,
+                                   idle=True)
                     continue
                 if incoming:        # idle until the next arrival
                     time.sleep(max(0.0, min(incoming[0][0] - now(), 0.01)))
+                emit_iteration(budget_used=0, decode_lanes=0,
+                               chunk_segments=0, chunk_tokens=0,
+                               width_bucket=0, padded_lanes=0, idle=True)
                 continue
 
             # -- unified token-budget iteration ----------------------------
@@ -1459,47 +1597,63 @@ class InferenceEngine:
                     if plan.decode_slots:
                         metrics.mixed_dispatches += 1
                         decode_micro_step()
-                    run_chunks(plan)
+                    padded = run_chunks(plan)
+                    emit_iteration(
+                        budget_used=int(plan.total_tokens),
+                        decode_lanes=len(plan.decode_slots),
+                        chunk_segments=len(plan.chunks),
+                        chunk_tokens=int(sum(c.length
+                                             for c in plan.chunks)),
+                        width_bucket=0, padded_lanes=int(padded),
+                        idle=False)
                     continue
 
             # -- fused decode steps ---------------------------------------
-            td0 = time.perf_counter()
+            n_lanes = int(act.sum())   # lanes entering this dispatch
             if spec_on:
                 # draft (host) -> one batched verify forward -> accept
                 # the longest valid prefix per slot -> rewind rejected
-                # KV.  One host sync per verify window.
-                contexts: List[Optional[list]] = [None] * slots
-                for slot, st in sched.slots.items():
-                    if act[slot]:
-                        contexts[slot] = st.request.tokens + st.emitted
-                drafts = drafter.propose_slots(contexts)
-                (tok_d, lens_d, rem_d, act_d, cache, rng, emits,
-                 accepted) = verify_fn(
-                    self.params, jnp.asarray(tok), jnp.asarray(lens),
-                    jnp.asarray(rem), jnp.asarray(act),
-                    jnp.asarray(drafts), jnp.asarray(block_tables),
-                    cache, rng)
-                emits = np.asarray(jax.block_until_ready(emits))
-                stats.decode_s += time.perf_counter() - td0
-                n_active = int(act.sum())
+                # KV.  One host sync per verify window.  Host-side
+                # drafting stays inside the span, exactly like the
+                # inline timer it replaced.
+                with dev_span("verify", "decode"):
+                    contexts: List[Optional[list]] = [None] * slots
+                    for slot, st in sched.slots.items():
+                        if act[slot]:
+                            contexts[slot] = st.request.tokens + st.emitted
+                    drafts = drafter.propose_slots(contexts)
+                    (tok_d, lens_d, rem_d, act_d, cache, rng, emits,
+                     accepted) = verify_fn(
+                        self.params, jnp.asarray(tok), jnp.asarray(lens),
+                        jnp.asarray(rem), jnp.asarray(act),
+                        jnp.asarray(drafts), jnp.asarray(block_tables),
+                        cache, rng)
+                    emits = np.asarray(jax.block_until_ready(emits))
                 metrics.steps += 1
                 metrics.slot_steps_total += slots
-                metrics.slot_steps_active += n_active
-                metrics.drafted_tokens += drafter.k * n_active
+                metrics.slot_steps_active += n_lanes
+                metrics.drafted_tokens += drafter.k * n_lanes
                 metrics.accepted_tokens += int(np.asarray(accepted).sum())
+                budget_used = n_lanes * (drafter.k + 1)
             else:
-                (tok_d, lens_d, rem_d, act_d, cache, rng, emits,
-                 acts) = step_fn(self.params, jnp.asarray(tok),
-                                 jnp.asarray(lens), jnp.asarray(rem),
-                                 jnp.asarray(act),
-                                 jnp.asarray(block_tables), cache, rng)
-                emits = np.asarray(jax.block_until_ready(emits))
-                stats.decode_s += time.perf_counter() - td0
+                with dev_span("decode", "decode"):
+                    (tok_d, lens_d, rem_d, act_d, cache, rng, emits,
+                     acts) = step_fn(self.params, jnp.asarray(tok),
+                                     jnp.asarray(lens), jnp.asarray(rem),
+                                     jnp.asarray(act),
+                                     jnp.asarray(block_tables), cache,
+                                     rng)
+                    emits = np.asarray(jax.block_until_ready(emits))
                 acts = np.asarray(acts)
                 metrics.steps += steps_per_sync
                 metrics.slot_steps_total += slots * steps_per_sync
                 metrics.slot_steps_active += int(acts.sum())
+                budget_used = n_lanes * steps_per_sync
             apply_decode_results(tok_d, lens_d, rem_d, act_d, emits)
+            emit_iteration(budget_used=int(budget_used),
+                           decode_lanes=n_lanes, chunk_segments=0,
+                           chunk_tokens=0, width_bucket=0, padded_lanes=0,
+                           idle=False)
 
         # host/device wall-time split for the whole run: device_s is the
         # time spent inside (blocking) device dispatches, host_s is
@@ -1519,7 +1673,9 @@ class InferenceEngine:
         metrics.offloaded_pages += trie.spilled_pages - spill_base
         metrics.restored_pages += sched.promoted_pages - promote_base
         trie.offload_fn = None
+        trie.trace = None
         if host is not None:
+            host.trace = None
             host.check()
             metrics.host_bytes_used = host.used_bytes
             metrics.host_bytes_peak = host.peak_bytes

@@ -100,6 +100,7 @@ class RadixPrefixCache:
         self.host_store = None         # HostKVStore or None
         self.offload_fn = None         # pages -> blob (device closure)
         self.spilled_pages = 0         # cumulative leaves demoted to host
+        self.trace = None              # optional ServeTracer (set per serve)
 
     # -- introspection ------------------------------------------------------
     def _iter_nodes(self):
@@ -239,6 +240,7 @@ class RadixPrefixCache:
                 if not nd.children and not nd.pinned]
         heapq.heapify(heap)
         freed = 0
+        spilled0 = self.spilled_pages
         while heap and freed < n_pages:
             _, _, nd = heapq.heappop(heap)
             if nd.children or nd.pinned or nd.parent is None:
@@ -263,6 +265,10 @@ class RadixPrefixCache:
             if (parent is not self.root and not parent.children
                     and not parent.pinned):
                 heapq.heappush(heap, (parent.tick, id(parent), parent))
+        if self.trace is not None and n_pages > 0:
+            self.trace.emit_now("prefix_evict", requested=int(n_pages),
+                                freed=int(freed),
+                                spilled=int(self.spilled_pages - spilled0))
         return freed
 
     def unpin_all(self) -> None:

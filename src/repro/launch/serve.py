@@ -116,9 +116,28 @@ def main():
                          "(auto = on whenever chunked prefill is on; "
                          "off = legacy decode-micro-step + per-chunk "
                          "dispatches)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a structured serve-loop trace of the "
+                         "continuous run: per-iteration timeline, request "
+                         "lifecycle spans and scheduler decisions "
+                         "(continuous mode only)")
+    ap.add_argument("--trace-format", default="jsonl",
+                    choices=["jsonl", "perfetto", "both"],
+                    help="trace export format: jsonl = one schema-"
+                         "versioned event per line; perfetto = Chrome "
+                         "trace-event JSON loadable at ui.perfetto.dev; "
+                         "both = write <PATH>.jsonl + <PATH>.perfetto.json")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="dump the COMPLETE ServeMetrics — every raw "
+                         "counter plus every derived property (host_frac, "
+                         "dispatches_per_iter, padded_token_frac, "
+                         "prefix_hit_rate, acceptance_rate, ...) — as one "
+                         "JSON object (continuous mode only)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--max-len", type=int, default=256)
     args = ap.parse_args()
+    if (args.trace_out or args.metrics_json) and not args.continuous:
+        raise SystemExit("--trace-out/--metrics-json require --continuous")
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     if cfg.num_codebooks or cfg.num_prefix_embeds:
@@ -169,6 +188,10 @@ def main():
             spec = SpecConfig(k=args.spec_k,
                               drafter=("ngram" if args.spec == "ngram"
                                        else "draft_model"))
+        tracer = None
+        if args.trace_out:
+            from repro.core.trace import ServeTracer
+            tracer = ServeTracer()
         t0 = time.time()
         done, metrics = engine.serve_continuous(
             reqs, sp, page_size=args.page_size,
@@ -177,10 +200,24 @@ def main():
             chunked_prefill=chunked, packed=packed,
             preemption=args.preemption,
             host_kv_bytes=args.host_kv_bytes,
-            debug_audit=args.debug_audit)
+            debug_audit=args.debug_audit, trace=tracer)
         dt = time.time() - t0
         for r in done[:3]:
             print(f"[{r.uid}] {tok.decode(r.result or [])[:70]!r}")
+        if tracer is not None:
+            from repro.core.trace import export as trace_export
+            for p in trace_export(tracer, args.trace_out,
+                                  args.trace_format):
+                print(f"trace: {p} ({len(tracer.events)} events, "
+                      f"{tracer.dropped} dropped)")
+        if args.metrics_json:
+            with open(args.metrics_json, "w") as f:
+                json.dump({"requests": len(done), "wall_s": round(dt, 3),
+                           "tokens_per_s": round(
+                               metrics.generated_tokens / dt, 1),
+                           "mode": "continuous-paged",
+                           **metrics.to_dict()}, f, indent=1)
+            print(f"metrics: {args.metrics_json}")
         print(json.dumps({
             "requests": len(done), "wall_s": round(dt, 3),
             "generated_tokens": metrics.generated_tokens,

@@ -1,0 +1,423 @@
+"""Serve-loop tracing: determinism, schema, zero-perturbation, exporters.
+
+Contracts under test:
+
+  * a ``ServeTracer`` driven by a fake monotonic clock produces
+    byte-identical JSONL across two fresh serve runs — every serve-loop
+    timestamp flows through the injected clock, and the exporter writes
+    canonical (sorted-key, fixed-separator) JSON;
+  * every event the engine/scheduler/prefix-cache/host-tier emits
+    validates against ``EVENT_SCHEMAS``, and ``validate_event`` rejects
+    unknown kinds, missing/extra fields and type mismatches;
+  * tracing is observation only: greedy outputs are bit-identical with
+    the tracer on vs. off across plain, shared-prefix, int8,
+    speculative and preemption/resume serving;
+  * trace-derived host/device totals reconcile with ``ServeMetrics``:
+    device span time matches ``device_s`` exactly (same timer reads),
+    iteration ``host_s`` is bounded by the metrics' host share;
+  * the Perfetto exporter emits structurally sound Chrome trace-event
+    JSON (balanced B/E per track, counter samples, named threads);
+  * ``ServeMetrics.percentile`` matches numpy on non-empty input and is
+    zero on empty; ``to_dict`` carries every derived property;
+  * ``bench_diff`` passes a baseline against itself, fails on
+    regressions and invariant breaks, and skips baseline-relative
+    checks on config mismatch.
+"""
+import copy
+import io
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from benchmarks import bench_diff
+from repro.configs.registry import get_reduced
+from repro.core.continuous import ServeMetrics
+from repro.core.engine import InferenceEngine
+from repro.core.precision import FP32
+from repro.core.scheduler import Request
+from repro.core import trace as TR
+from repro.core.trace import (EVENT_SCHEMAS, ServeTracer, to_perfetto_dict,
+                              validate_event, validate_events)
+from repro.models import transformer as T
+
+
+class FakeClock:
+    """Deterministic monotonic clock: advances a fixed step per read."""
+
+    def __init__(self, step=0.001):
+        self.t = 0.0
+        self.step = step
+
+    def __call__(self):
+        self.t += self.step
+        return self.t
+
+
+def _requests(rng, cfg, lens_new, prefix=None):
+    prefix = prefix or []
+    return [Request(uid=i,
+                    tokens=[2] + prefix + list(map(int, rng.integers(
+                        4, min(cfg.vocab_size, 400), size=ln))),
+                    max_new_tokens=mn)
+            for i, (ln, mn) in enumerate(lens_new)]
+
+
+def _serve(eng, reqs, **kw):
+    done, m = eng.serve_continuous(copy.deepcopy(reqs), page_size=8,
+                                   max_batched_tokens=16,
+                                   chunked_prefill=True, **kw)
+    return {r.uid: r.result for r in done}, m
+
+
+def _engine(cfg, params, policy=FP32):
+    return InferenceEngine(cfg, params, policy=policy, max_len=64,
+                           max_batch=3)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_reduced("qwen3-4b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# Determinism: fake clock -> byte-identical JSONL
+# ---------------------------------------------------------------------------
+
+
+def _traced_run(cfg, params, reqs, **kw):
+    tr = ServeTracer(clock=FakeClock())
+    done, m = _serve(_engine(cfg, params), reqs, trace=tr, **kw)
+    return tr, done, m
+
+
+def test_fake_clock_jsonl_byte_identical(rng, model):
+    cfg, params = model
+    reqs = _requests(rng, cfg, [(14, 4), (22, 4), (9, 3)])
+    bufs = []
+    for _ in range(2):
+        tr, _, _ = _traced_run(cfg, params, reqs)
+        buf = io.StringIO()
+        tr.to_jsonl(buf)
+        bufs.append(buf.getvalue())
+    assert bufs[0] == bufs[1]
+    lines = bufs[0].splitlines()
+    assert json.loads(lines[0])["kind"] == "trace_header"
+    kinds = {json.loads(l)["kind"] for l in lines[1:]}
+    assert {"enqueue", "admit", "prefill_chunk", "first_token", "span",
+            "iteration", "retire"} <= kinds
+
+
+def test_timestamps_serve_relative_and_monotone_origin(rng, model):
+    cfg, params = model
+    reqs = _requests(rng, cfg, [(11, 3)])
+    tr, _, _ = _traced_run(cfg, params, reqs)
+    ts = [e["t"] for e in tr.events]
+    assert ts and min(ts) >= 0.0
+    # iteration records carry a strictly increasing index from 0
+    its = [e["iter"] for e in tr.iter_events("iteration")]
+    assert its == list(range(len(its)))
+
+
+# ---------------------------------------------------------------------------
+# Schema: every emitted event validates; validator rejects bad events
+# ---------------------------------------------------------------------------
+
+
+def test_emitted_events_schema_valid_plain(rng, model):
+    cfg, params = model
+    reqs = _requests(rng, cfg, [(14, 4), (22, 4), (9, 3)])
+    tr, _, _ = _traced_run(cfg, params, reqs)
+    assert validate_events(tr.events) == []
+
+
+def test_emitted_events_schema_valid_preempt(rng, model):
+    """The contended path exercises the decision/host-tier kinds."""
+    cfg, params = model
+    reqs = _requests(rng, cfg, [(30, 6), (28, 6), (26, 5), (22, 6), (9, 5)])
+    tr, _, m = _traced_run(cfg, params, reqs, num_pages=11, preemption="lru",
+                           host_kv_bytes=1 << 30, debug_audit=True)
+    assert validate_events(tr.events) == []
+    assert m.preemptions >= 1
+    kinds = {e["kind"] for e in tr.events}
+    assert {"preempt", "offload", "restore", "admission_denied"} <= kinds
+    # every emitted kind is a known schema kind
+    assert kinds <= set(EVENT_SCHEMAS)
+
+
+def test_validate_event_rejects_bad_events():
+    ok = {"kind": "first_token", "t": 0.5, "uid": 1, "ttft_s": 0.5}
+    assert validate_event(ok) == []
+    assert validate_event({"kind": "nope", "t": 0.0})      # unknown kind
+    assert validate_event({"kind": "first_token", "t": 0.5, "uid": 1})
+    assert validate_event({**ok, "ttft_s": "fast"})         # wrong type
+    assert validate_event({**ok, "bogus": 1})               # extra field
+    assert validate_event({**ok, "t": "now"})               # bad timestamp
+    assert validate_event({"kind": "trace_header", "v": 999})
+    # bools are not ints/nums
+    assert validate_event({"kind": "host_evict", "t": 0.0, "bytes": True})
+
+
+def test_optional_fields_allowed_absent_or_null():
+    base = {"kind": "admission_denied", "t": 0.0, "uid": 3,
+            "reason": "no_free_slot"}
+    assert validate_event(base) == []
+    assert validate_event({**base, "pages_needed": None}) == []
+    assert validate_event({**base, "pages_needed": 7}) == []
+
+
+def test_validate_jsonl_roundtrip(tmp_path):
+    tr = ServeTracer(clock=FakeClock())
+    tr.emit("enqueue", 0.0, uid=0, prompt_len=5, max_new=4)
+    tr.emit("host_evict", 0.1, bytes=4096)
+    p = str(tmp_path / "t.jsonl")
+    tr.to_jsonl(p)
+    n, errs = TR.validate_jsonl(p)
+    assert (n, errs) == (2, [])
+
+
+# ---------------------------------------------------------------------------
+# Zero perturbation: traced == untraced, bit-identical, across modes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["plain", "prefix", "int8", "spec",
+                                  "preempt"])
+def test_traced_outputs_bit_identical(rng, model, mode):
+    cfg, params = model
+    import dataclasses
+    policy = dataclasses.replace(FP32, kv_dtype="int8") \
+        if mode == "int8" else FP32
+    prefix = list(map(int, rng.integers(4, 400, size=16))) \
+        if mode == "prefix" else None
+    shapes = [(14, 5), (25, 5), (9, 4)] if prefix \
+        else [(30, 5), (26, 5), (9, 4), (22, 5)]
+    reqs = _requests(rng, cfg, shapes, prefix=prefix)
+    kw = {}
+    if mode == "spec":
+        from repro.core.speculative import SpecConfig
+        kw["spec"] = SpecConfig(k=3, drafter="ngram")
+    if mode == "preempt":
+        kw.update(num_pages=11, preemption="lru", host_kv_bytes=1 << 30,
+                  debug_audit=True)
+
+    base, _ = _serve(_engine(cfg, params, policy), reqs, **kw)
+    tr = ServeTracer()
+    done, _ = _serve(_engine(cfg, params, policy), reqs, trace=tr, **kw)
+    for uid, out in done.items():
+        assert out == base[uid], f"tracing perturbed outputs ({mode})"
+    assert validate_events(tr.events) == []
+
+
+# ---------------------------------------------------------------------------
+# Reconciliation: trace totals vs ServeMetrics
+# ---------------------------------------------------------------------------
+
+
+def test_trace_reconciles_with_metrics(rng, model):
+    cfg, params = model
+    reqs = _requests(rng, cfg, [(18, 5), (24, 5), (11, 4)])
+    tr = ServeTracer()
+    _, m = _serve(_engine(cfg, params), reqs, trace=tr)
+    span_dev = sum(e["dur"] for e in tr.iter_events("span")
+                   if e["track"] == "device")
+    it_dev = sum(e["device_s"] for e in tr.iter_events("iteration"))
+    it_host = sum(e["host_s"] for e in tr.iter_events("iteration"))
+    # device spans use the same clock reads that feed prefill_s/decode_s
+    assert span_dev == pytest.approx(m.device_s, rel=1e-9, abs=1e-9)
+    assert it_dev == pytest.approx(m.device_s, rel=1e-9, abs=1e-9)
+    # iteration host time excludes pre/post-loop overhead, so it can only
+    # undershoot the metrics' host share
+    assert 0.0 <= it_host <= m.host_s + 1e-6
+    # lifecycle accounting closes: every request enqueued, admitted, retired
+    uids = {r.uid for r in reqs}
+    for kind in ("enqueue", "admit", "retire"):
+        assert {e["uid"] for e in tr.iter_events(kind)} == uids
+    # iteration budget fields respect the configured ceiling
+    for e in tr.iter_events("iteration"):
+        assert e["budget"] == 16
+        assert 0 <= e["budget_used"] <= 16
+
+
+def test_first_token_matches_metrics_ttft(rng, model):
+    cfg, params = model
+    reqs = _requests(rng, cfg, [(13, 4), (21, 4)])
+    tr = ServeTracer()
+    _, m = _serve(_engine(cfg, params), reqs, trace=tr)
+    ttfts = sorted(e["ttft_s"] for e in tr.iter_events("first_token"))
+    assert len(ttfts) == len(reqs)
+    np.testing.assert_allclose(ttfts, sorted(m.ttft_s), rtol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Perfetto exporter
+# ---------------------------------------------------------------------------
+
+
+def test_perfetto_structure(rng, model):
+    cfg, params = model
+    reqs = _requests(rng, cfg, [(14, 4), (22, 4)])
+    tr, _, _ = _traced_run(cfg, params, reqs)
+    doc = to_perfetto_dict(list(tr.events), dropped=tr.dropped)
+    te = doc["traceEvents"]
+    assert isinstance(te, list) and te
+    assert doc["otherData"]["schema_version"] == TR.TRACE_SCHEMA_VERSION
+    names = {e.get("args", {}).get("name") for e in te if e["ph"] == "M"}
+    assert {"repro-serve", "scheduler", "device"} <= names
+    # balanced B/E nesting per tid (slot occupancy slices)
+    depth = {}
+    for e in te:
+        if e["ph"] == "B":
+            depth[e["tid"]] = depth.get(e["tid"], 0) + 1
+        elif e["ph"] == "E":
+            depth[e["tid"]] = depth.get(e["tid"], 0) - 1
+            assert depth[e["tid"]] >= 0
+    assert all(v == 0 for v in depth.values())
+    # gauges exported as counter tracks, timestamps in microseconds
+    counters = {e["name"] for e in te if e["ph"] == "C"}
+    assert {"pages_in_use", "host_bytes", "trie_nodes"} <= counters
+    assert all(isinstance(e["ts"], (int, float))
+               for e in te if "ts" in e)
+
+
+def test_perfetto_closes_dangling_slices():
+    """A preempt without slot (lost record) must not corrupt nesting:
+    an admit with no matching end is closed at trace end."""
+    evs = [{"kind": "admit", "t": 0.1, "uid": 7, "slot": 0,
+            "matched_tokens": 0, "pages": 2, "resume": "no"}]
+    doc = to_perfetto_dict(evs)
+    phases = [e["ph"] for e in doc["traceEvents"]]
+    assert phases.count("B") == phases.count("E") == 1
+
+
+def test_ring_buffer_drops_and_counts():
+    tr = ServeTracer(clock=FakeClock(), ring_size=5)
+    for i in range(8):
+        tr.emit("host_evict", float(i), bytes=i)
+    assert len(tr.events) == 5
+    assert tr.dropped == 3
+    assert [e["t"] for e in tr.events] == [3.0, 4.0, 5.0, 6.0, 7.0]
+    assert tr.header()["dropped"] == 3
+
+
+# ---------------------------------------------------------------------------
+# Shared percentile helper + metrics dump
+# ---------------------------------------------------------------------------
+
+
+def test_percentile_matches_numpy(rng):
+    vals = list(rng.uniform(0.0, 10.0, size=37))
+    for q in (50, 90, 99):
+        assert ServeMetrics.percentile(vals, q) == pytest.approx(
+            float(np.percentile(np.asarray(vals), q)))
+    assert ServeMetrics.percentile([], 50) == 0.0
+    assert ServeMetrics.percentile([3.5], 99) == 3.5
+
+
+def test_metrics_to_dict_derived_keys():
+    m = ServeMetrics(host_s=1.0, device_s=3.0, mixed_iters=4,
+                     mixed_dispatches=4, packed_tokens_real=90,
+                     packed_tokens_padded=100,
+                     latency_s=[1.0, 2.0], ttft_s=[0.1, 0.2],
+                     itl_s=[0.01, 0.02])
+    d = m.to_dict()
+    for k in ("latency_p50", "latency_p99", "ttft_p50", "ttft_p99",
+              "itl_p50", "itl_p99", "host_frac", "dispatches_per_iter",
+              "padded_token_frac", "decode_idle_frac", "acceptance_rate",
+              "tokens_per_forward", "prefix_hit_rate"):
+        assert k in d, k
+    assert d["host_frac"] == pytest.approx(0.25)
+    assert "latency_s" not in d                   # raw lists opt-in only
+    assert "latency_s" in m.to_dict(include_raw=True)
+    json.dumps(d)                                 # JSON-serializable
+
+
+# ---------------------------------------------------------------------------
+# bench_diff regression gate
+# ---------------------------------------------------------------------------
+
+
+def _synthetic_overload(**over):
+    rep = {
+        "arch": "qwen3-4b", "requests": 8, "slots": 3, "max_new": 8,
+        "trace": "overload",
+        "overload": {
+            "all_terminal": True, "all_completed": True,
+            "outputs_identical_contended": True,
+            "contended": {"preemptions": 10, "offloaded_pages": 72,
+                          "restored_pages": 72},
+        },
+    }
+    for path, v in over.items():
+        cur = rep
+        parts = path.split(".")
+        for p in parts[:-1]:
+            cur = cur[p]
+        cur[parts[-1]] = v
+    return rep
+
+
+def test_bench_diff_baseline_vs_itself_passes():
+    rep = _synthetic_overload()
+    v = bench_diff.diff(rep, rep)
+    assert v["kind"] == "overload"
+    assert v["config_match"] and v["pass"] and v["n_fail"] == 0
+
+
+def test_bench_diff_invariant_break_fails():
+    base = _synthetic_overload()
+    fresh = _synthetic_overload(**{
+        "overload.outputs_identical_contended": False})
+    v = bench_diff.diff(base, fresh)
+    assert not v["pass"]
+    bad = [c for c in v["checks"] if c["status"] == "FAIL"]
+    assert any("outputs_identical_contended" in c["path"] for c in bad)
+
+
+def test_bench_diff_relative_regression_fails_on_config_match():
+    base = _synthetic_overload()
+    fresh = _synthetic_overload(**{"overload.contended.preemptions": 500})
+    v = bench_diff.diff(base, fresh)
+    assert not v["pass"]          # preemptions ballooned beyond tolerance
+
+
+def test_bench_diff_config_mismatch_skips_relative_checks():
+    base = _synthetic_overload()
+    fresh = _synthetic_overload(**{"overload.contended.preemptions": 500})
+    fresh["requests"] = 99        # different run shape
+    v = bench_diff.diff(base, fresh)
+    assert not v["config_match"]
+    assert v["pass"]              # invariants hold; relative checks skipped
+    assert any(c["status"] == "SKIP" and c["mode"] == "rel"
+               for c in v["checks"])
+
+
+def test_bench_diff_if_present_semantics():
+    base = {"arch": "a", "requests": 1, "slots": 1, "max_new": 1,
+            "trace": "mixed",
+            "outputs_identical_prefix_on_off": True,
+            "packed": {"outputs_identical_packed_on_off": True,
+                       "packed_on": {"dispatches_per_iter": 1.0,
+                                     "padded_token_frac": 0.1,
+                                     "prefill_pad_frac": 0.0}}}
+    # absent from both baseline and fresh -> SKIP
+    v = bench_diff.diff(base, copy.deepcopy(base), kind="serving")
+    spec = [c for c in v["checks"]
+            if c["path"] == "speculative.outputs_match_nonspec"][0]
+    assert spec["status"] == "SKIP"
+    # present in baseline, silently dropped from fresh -> FAIL
+    base2 = copy.deepcopy(base)
+    base2["speculative"] = {"outputs_match_nonspec": True}
+    v2 = bench_diff.diff(base2, copy.deepcopy(base), kind="serving")
+    spec2 = [c for c in v2["checks"]
+             if c["path"] == "speculative.outputs_match_nonspec"][0]
+    assert spec2["status"] == "FAIL" and not v2["pass"]
+
+
+def test_bench_diff_kind_detection():
+    assert bench_diff.detect_kind({"overload": {}}) == "overload"
+    assert bench_diff.detect_kind({"longprompt": {}}) == "longprompt"
+    assert bench_diff.detect_kind({"packed": {}}) == "serving"
