@@ -156,6 +156,18 @@ def checks_serving() -> List[Check]:
         Check("packed.outputs_identical_packed_on_off", "true"),
         Check("speculative.outputs_match_nonspec", "true", if_present=True),
         Check("kv_sweep.int8_outputs_match_bf16", "true", if_present=True),
+        # weight sweep: int8 weights must actually compress (codes +
+        # fp32 scales land a bit above half of bf16 — gate at 0.6), and
+        # greedy parity vs full precision is recorded, not hidden
+        Check("weight_sweep.int8_weight_bytes_ratio_vs_bf16", "le",
+              value=0.6, if_present=True),
+        Check("weight_sweep.int8.weight_bytes_saved", "ge", value=1,
+              if_present=True),
+        Check("weight_sweep.int8_greedy_match_frac", "ge", value=0.0,
+              if_present=True),
+        Check("weight_sweep.int8_speedup_tokens_per_s", "rel",
+              rel_tol=0.5, abs_tol=0.05, higher_better=True,
+              if_present=True),
         # structural: token packing really packs — one (1, T) dispatch per
         # mixed iteration, and padding waste stays bounded
         Check("packed.packed_on.dispatches_per_iter", "eq", value=1.0,

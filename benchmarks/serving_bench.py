@@ -427,6 +427,10 @@ def run_continuous(engine: InferenceEngine, reqs, sp, *, page_size,
         "kv_dtype": m.kv_dtype,
         "kv_pool_bytes": m.kv_pool_bytes,
         "kv_bytes_per_token": round(m.kv_bytes_per_token, 1),
+        "weight_dtype": m.weight_dtype,
+        "weight_bytes": m.weight_bytes,
+        "weight_bytes_saved": m.weight_bytes_saved,
+        "host_syncs": m.host_syncs,
         "peak_pages_in_use": m.peak_pages_in_use,
         "admission_stalls": m.admission_stalls,
         "rejected": m.rejected,
@@ -519,6 +523,54 @@ def run_kv_sweep(args, cfg, params, base_policy, trace, sp, arrivals):
     }
 
 
+def run_weight_sweep(args, cfg, params, base_policy, trace, sp, arrivals):
+    """Same trace at weights_dtype bf16 vs int8 (identical pool, slots
+    and arrivals — weight storage is the only variable): int8 reads
+    roughly half the weight bytes per matmul, which is where the
+    decode-side win comes from on weight-bound hardware.  A
+    full-precision (weights auto) leg provides the greedy-output
+    reference; per-request agreement is recorded as a fraction, never
+    asserted away — requests whose greedy margin sits below the
+    per-channel quantization noise can flip (see README precision)."""
+    import dataclasses
+    legs, outs = {}, {}
+    for name, wd in (("fp", "auto"), ("bf16", "bf16"), ("int8", "int8")):
+        pol = dataclasses.replace(base_policy, weights_dtype=wd)
+        eng = InferenceEngine(cfg, params, policy=pol,
+                              max_batch=args.max_batch,
+                              max_len=args.max_len)
+        run_continuous(eng, copy.deepcopy(trace), sp,       # warm compile
+                       page_size=args.page_size, num_pages=args.num_pages,
+                       steps_per_sync=args.steps_per_sync,
+                       prefix_cache=True)
+        eng.reset_prefix_cache()                            # cold trie
+        reqs = copy.deepcopy(trace)
+        legs[name] = run_continuous(eng, reqs, sp,
+                                    page_size=args.page_size,
+                                    num_pages=args.num_pages,
+                                    steps_per_sync=args.steps_per_sync,
+                                    arrivals=arrivals, prefix_cache=True)
+        outs[name] = [r.result for r in reqs]
+    speedup = (legs["int8"]["tokens_per_s"] / legs["bf16"]["tokens_per_s"]
+               if legs["bf16"]["tokens_per_s"] else float("nan"))
+    bf16_bytes = legs["bf16"]["weight_bytes"]
+    n = len(outs["fp"]) or 1
+    return {
+        "fp_reference": legs["fp"],
+        "bf16": legs["bf16"],
+        "int8": legs["int8"],
+        "int8_speedup_tokens_per_s": round(speedup, 3),
+        # codes + fp32 scales vs the same tensors at 2 bytes/element
+        "int8_weight_bytes_ratio_vs_bf16": round(
+            legs["int8"]["weight_bytes"] / bf16_bytes, 3)
+        if bf16_bytes else float("nan"),
+        "int8_outputs_match_fp": outs["int8"] == outs["fp"],
+        "int8_greedy_match_frac": round(sum(
+            a == b for a, b in zip(outs["int8"], outs["fp"])) / n, 3),
+        "int8_outputs_match_bf16": outs["int8"] == outs["bf16"],
+    }
+
+
 def run_spec_leg(args, engine_factory, trace, sp, arrivals, baseline_reqs):
     """Serve the trace with draft-verify decoding and compare against the
     non-speculative continuous outputs: greedy parity must be bit-exact
@@ -597,6 +649,16 @@ def main():
     ap.add_argument("--kv-budget-pages", type=int, default=None,
                     help="bf16 page budget for --kv-sweep (int8 gets 2x); "
                          "default: half the slots' worth of pages")
+    ap.add_argument("--weights-dtype", default="auto",
+                    choices=["auto", "bf16", "fp16", "int8"],
+                    help="serve-path weight storage dtype for the main "
+                         "runs (int8 = quantized codes + per-channel "
+                         "scales with fused-dequant matmuls)")
+    ap.add_argument("--weight-sweep", action="store_true",
+                    help="also run the same trace at weights bf16 vs "
+                         "int8 (equal trace, pool and arrivals) and "
+                         "record tokens/s, ITL p99, weight bytes and "
+                         "greedy parity vs a full-precision reference")
     ap.add_argument("--spec", default="off",
                     choices=["off", "ngram", "draft"],
                     help="add a speculative-decoding leg: ngram = "
@@ -646,9 +708,10 @@ def main():
 
     cfg = get_reduced(args.arch)
     policy = get_policy(args.policy)
-    if args.kv_dtype != "auto":
+    if args.kv_dtype != "auto" or args.weights_dtype != "auto":
         import dataclasses
-        policy = dataclasses.replace(policy, kv_dtype=args.kv_dtype)
+        policy = dataclasses.replace(policy, kv_dtype=args.kv_dtype,
+                                     weights_dtype=args.weights_dtype)
     from repro.models import transformer as T
     params = T.init_params(jax.random.PRNGKey(0), cfg, policy)
     sp = SamplingParams()                                 # greedy
@@ -779,6 +842,10 @@ def main():
     if args.kv_sweep:
         report["kv_sweep"] = run_kv_sweep(args, cfg, params, policy,
                                           trace, sp, arrivals)
+    if args.weight_sweep:
+        report["weight_sweep"] = run_weight_sweep(args, cfg, params,
+                                                  policy, trace, sp,
+                                                  arrivals)
     if tracer is not None:
         finish_tracing(report, tracer, args.trace_out, args.trace_format)
     print(json.dumps(report, indent=2))

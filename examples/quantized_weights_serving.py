@@ -1,0 +1,79 @@
+"""Serve-time int8 weight-only quantization (weights_dtype policy axis).
+
+One `dataclasses.replace(policy, weights_dtype="int8")` turns every
+serve-path dense matmul — attention qkv/out, dense FFN, the unembed
+head — into int8 codes + per-output-channel fp32 scales at engine
+build.  Decode streams ~1/4 of the fp32 weight bytes per step (~1/2 of
+bf16); on TPU the dequant is fused into a Pallas matmul kernel, on CPU
+an exact jnp fallback computes the same `(x @ q) * s` product.
+
+This demo serves the same trace at full-precision weights and at int8,
+then prints the weight-byte footprint and per-request greedy agreement
+(recorded, not asserted: weight quantization has no bit-exactness
+guarantee — a request whose greedy margin sits below the quantization
+noise can flip, though this trace matches exactly).
+
+    PYTHONPATH=src python examples/quantized_weights_serving.py
+"""
+import copy
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.registry import get_reduced
+from repro.core.engine import InferenceEngine
+from repro.core.precision import FP32
+from repro.core.scheduler import Request
+from repro.models import transformer as T
+
+
+def build_requests(rng, n=8, max_new=8):
+    return [Request(uid=i,
+                    tokens=[2] + list(map(int, rng.integers(
+                        4, 400, size=int(rng.integers(6, 16))))),
+                    max_new_tokens=max_new)
+            for i in range(n)]
+
+
+def serve(eng, reqs):
+    t0 = time.perf_counter()
+    done, metrics = eng.serve_continuous(copy.deepcopy(reqs), page_size=8,
+                                         max_batched_tokens=32,
+                                         prefix_cache=True)
+    return done, metrics, time.perf_counter() - t0
+
+
+def main():
+    cfg = get_reduced("qwen3-4b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    reqs = build_requests(np.random.default_rng(0))
+
+    legs = {}
+    for name, wd in (("fp32", "auto"), ("int8", "int8")):
+        pol = dataclasses.replace(FP32, weights_dtype=wd)
+        eng = InferenceEngine(cfg, params, policy=pol, max_len=64,
+                              max_batch=4)
+        serve(eng, reqs)                                    # warm jit
+        eng.reset_prefix_cache()
+        legs[name] = serve(eng, reqs)
+
+    done_fp, m_fp, t_fp = legs["fp32"]
+    done_q8, m_q8, t_q8 = legs["int8"]
+    match = sum(a.result == b.result for a, b in zip(done_fp, done_q8))
+
+    dense = m_q8.weight_bytes + m_q8.weight_bytes_saved
+    print(f"fp32 weights : {t_fp*1e3:7.1f} ms  "
+          f"({m_fp.weight_bytes/1e6:.2f} MB serve-path weights)")
+    print(f"int8 weights : {t_q8*1e3:7.1f} ms  "
+          f"({m_q8.weight_bytes/1e6:.2f} MB codes+scales, "
+          f"{m_q8.weight_bytes/dense:.0%} of dense — "
+          f"{m_q8.weight_bytes_saved/1e6:.2f} MB saved)")
+    print(f"greedy agreement vs fp32: {match}/{len(reqs)} requests "
+          f"(recorded per run; tied gather table stays full precision, "
+          f"unembed reads a separate int8 head)")
+
+
+if __name__ == "__main__":
+    main()

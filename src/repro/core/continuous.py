@@ -390,6 +390,11 @@ class ServeMetrics:
     kv_dtype: str = "auto"           # pool storage mode this run served at
     kv_pool_bytes: int = 0           # total paged-pool bytes (incl. scales)
     kv_bytes_per_token: float = 0.0  # pool bytes / token of capacity
+    # -- weight compression (weights_dtype axis) ----------------------------
+    weight_dtype: str = "auto"       # serve-path weight storage this run
+    weight_bytes: int = 0            # dense matmul weight bytes (post-quant,
+    #   int8 codes + fp32 scales; the bytes every forward streams)
+    weight_bytes_saved: int = 0      # dense-storage bytes removed by the axis
     peak_pages_in_use: int = 0       # high-water mark of allocated pages
     admission_stalls: int = 0        # syncs a free slot waited on the pool
     # -- speculative decoding -----------------------------------------------
@@ -408,6 +413,8 @@ class ServeMetrics:
     # -- packed execution (token-packed ragged iterations) ------------------
     host_s: float = 0.0              # serve-loop wall time minus device time
     device_s: float = 0.0            # time inside blocking device dispatches
+    host_syncs: int = 0              # device->host result transfers (one per
+    #   iteration on the coalesced mixed path, not one per dispatch)
     mixed_iters: int = 0             # iterations that carried prefill chunks
     mixed_dispatches: int = 0        # device dispatches those iterations made
     packed_tokens_real: int = 0      # real lanes across packed dispatches

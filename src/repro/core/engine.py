@@ -28,7 +28,7 @@ from repro.core import prefix_cache as PC
 from repro.core import pruning as PR
 from repro.core.continuous import (ContinuousScheduler, FaultConfig,
                                    HostKVStore, PageAllocator, ServeMetrics)
-from repro.core.precision import BF16, Policy
+from repro.core.precision import BF16, Policy, compress_weights
 from repro.core.sampling import SamplingParams, sample, speculative_verify
 from repro.core.speculative import SpecConfig, get_drafter
 from repro.core.scheduler import (DEFAULT_BUCKETS, Batch, DynamicBatcher,
@@ -98,6 +98,15 @@ class InferenceEngine:
         self.cfg = cfg
         self.policy = policy
         self.params = policy.cast_params(params)
+        # serve-time weight compression (weights_dtype axis): quantize /
+        # recast the dense serve-path matmul weights AFTER cast_params
+        # (which would recast the fp32 scales of a quantized tree).
+        # Timed so the serve trace can carry a load-time span.
+        t_q = time.perf_counter()
+        self.params, self.weight_stats = compress_weights(self.params,
+                                                          policy)
+        jax.block_until_ready(self.params)
+        self.weight_quant_s = time.perf_counter() - t_q
         self.max_batch = max_batch
         self.max_len = max_len
         self.use_kv_cache = use_kv_cache
@@ -896,9 +905,14 @@ class InferenceEngine:
             host.trace = trace
         spill_base = trie.spilled_pages
         promote_base = sched.promoted_pages
+        ws = self.weight_stats
         metrics = ServeMetrics(kv_dtype=ctx["kv_dtype"],
                                kv_pool_bytes=ctx["kv_pool_bytes"],
                                kv_bytes_per_token=ctx["kv_bytes_per_token"],
+                               weight_dtype=ws["weights_dtype"],
+                               weight_bytes=int(ws["weight_bytes"]),
+                               weight_bytes_saved=int(
+                                   ws["weight_bytes_saved"]),
                                spec_mode=drafter.name if spec_on else "off",
                                spec_k=drafter.k if spec_on else 0,
                                scheduler="unified" if chunked
@@ -930,6 +944,17 @@ class InferenceEngine:
         t0 = clk()
         if tr is not None:
             tr.set_origin(t0)
+            # weight-compression state gauge at serve start, plus the
+            # load-time quantization span (only when weights actually
+            # compressed: the span's wall-clock duration would otherwise
+            # break fake-clock byte-determinism for uncompressed runs)
+            tr.emit("weights", 0.0, dtype=ws["weights_dtype"],
+                    weight_bytes=int(ws["weight_bytes"]),
+                    weight_bytes_dense=int(ws["weight_bytes_dense"]),
+                    quantized_tensors=int(ws["n_quantized"]))
+            if ws["n_quantized"]:
+                tr.emit("span", 0.0, name="quantize_weights",
+                        dur=float(self.weight_quant_s), track="load")
 
         def now():
             return clk() - t0
@@ -1054,7 +1079,9 @@ class InferenceEngine:
             """One 1-token decode dispatch over every live slot — the
             decode share of a mixed iteration (each decoding slot's
             budget cost is exactly one token, so admitting prompts can
-            never starve decode)."""
+            never starve decode).  Dispatch only: no host sync here —
+            the caller folds the results in after the iteration's
+            single coalesced fetch."""
             nonlocal cache, rng
             with dev_span("decode_micro", "decode"):
                 (tok_d, lens_d, rem_d, act_d, cache, rng, emits,
@@ -1062,28 +1089,41 @@ class InferenceEngine:
                                   jnp.asarray(lens), jnp.asarray(rem),
                                   jnp.asarray(act),
                                   jnp.asarray(block_tables), cache, rng)
-                emits = np.asarray(jax.block_until_ready(emits))
             metrics.steps += 1
             metrics.slot_steps_total += slots
-            metrics.slot_steps_active += int(np.asarray(acts).sum())
-            apply_decode_results(tok_d, lens_d, rem_d, act_d, emits)
+            return tok_d, lens_d, rem_d, act_d, emits, acts
 
-        def run_chunks(plan):
-            """The prefill share of a mixed iteration: each scheduled
-            chunk runs as one packed single-row mixed forward (page
+        def run_mixed(plan):
+            """One mixed iteration, ONE host sync.  The decode
+            micro-step and every prefill-chunk forward are dispatched
+            back-to-back asynchronously; a single ``jax.device_get``
+            then drains the iteration's scalar results (decode emits +
+            final-chunk samples) before any bookkeeping runs.  The
+            per-dispatch ``block_until_ready`` calls this replaces were
+            the mixed path's dominant host-time term — the device sat
+            idle between dispatches while the host did bookkeeping.
+
+            Each chunk runs as one packed single-row mixed forward (page
             reset + COW copy fused into the slot's first chunk), so an
             iteration's prefill compute tracks the budget's *real*
             token count — decode rows never pad chunk-wide, chunk rows
             never pad slot-deep.  Chunk dispatches are (1, W-bucket)
             shaped: a small deterministic trace set regardless of how
-            arrival timing slices the prompts.  Returns the total padded
-            lanes across this plan's chunk dispatches (the iteration
-            record's ``padded_lanes``)."""
+            arrival timing slices the prompts.
+
+            Bookkeeping replays the pre-coalescing order exactly —
+            decode results first, then chunks in plan order — so greedy
+            token streams, trie insertions, and allocator state stay
+            bit-identical to the one-sync-per-dispatch loop.  Returns
+            the total padded lanes across this plan's chunk dispatches
+            (the iteration record's ``padded_lanes``)."""
             nonlocal cache, rng
+            dec = decode_micro_step() if plan.decode_slots else None
             padded = 0
-            for c in plan.chunks:
+            finals = {}        # chunk index -> final-chunk logits handle
+            inited = set()     # slots whose page init this plan consumed
+            for ci, c in enumerate(plan.chunks):
                 st = sched.slots[c.slot]
-                req = st.request
                 W = pick_bucket(c.length, width_buckets)
                 toks = np.zeros((1, W), np.int32)
                 # st.ctx == the prompt, except on a recompute-resume
@@ -1093,7 +1133,10 @@ class InferenceEngine:
                 cow_src = np.full((1,), dump, np.int32)
                 cow_dst = np.full((1,), dump, np.int32)
                 cow_keep = np.zeros((1,), np.int32)
-                if st.needs_init:
+                if st.needs_init and c.slot not in inited:
+                    # page init rides the slot's FIRST chunk only —
+                    # needs_init itself clears in the bookkeeping phase
+                    inited.add(c.slot)
                     reset_row[0, :len(st.fresh_pages)] = st.fresh_pages
                     if st.cow_src >= 0:
                         # COW invariant: the destination must be private
@@ -1113,22 +1156,35 @@ class InferenceEngine:
                         jnp.asarray(reset_row), jnp.asarray(cow_src),
                         jnp.asarray(cow_dst), jnp.asarray(cow_keep), cache,
                         rng)
-                    # only a prompt's FINAL chunk consumes its sampled
-                    # token; mid-prompt chunks stay async (no host sync),
-                    # so the dispatch pipeline keeps flowing — prefill_s
-                    # then books a mid-prompt chunk's device time against
-                    # whichever later dispatch blocks on it
-                    if c.start + c.length >= st.ctx_len \
-                            and not st.is_resume:
-                        nxt = np.asarray(jax.block_until_ready(nxt))
                 if tr is not None:
-                    tr.emit_now("prefill_chunk", uid=req.uid,
+                    tr.emit_now("prefill_chunk", uid=st.request.uid,
                                 slot=int(c.slot), start=int(c.start),
                                 len=int(c.length))
                 padded += W - c.length
                 metrics.prefill_chunks += 1
                 metrics.prefill_tokens += c.length
                 metrics.prefill_padded += W
+                # only a prompt's FINAL chunk consumes its sampled token
+                if c.start + c.length >= st.ctx_len and not st.is_resume:
+                    finals[ci] = nxt
+            # the iteration's single device->host transfer: every
+            # dispatch above is in flight; blocking time books into
+            # prefill_s (async dispatches' device time lands on whoever
+            # blocks — here, always this span)
+            with dev_span("mixed_sync", "prefill"):
+                sync = jax.device_get(
+                    {"emits": None if dec is None else dec[4],
+                     "acts": None if dec is None else dec[5],
+                     "finals": finals})
+            metrics.host_syncs += 1
+            if dec is not None:
+                tok_d, lens_d, rem_d, act_d = dec[:4]
+                metrics.slot_steps_active += int(sync["acts"].sum())
+                apply_decode_results(tok_d, lens_d, rem_d, act_d,
+                                     np.asarray(sync["emits"]))
+            for ci, c in enumerate(plan.chunks):
+                st = sched.slots[c.slot]
+                req = st.request
                 if st.needs_init:
                     st.needs_init = False
                     sched.release_cow_source(st)
@@ -1152,7 +1208,7 @@ class InferenceEngine:
                     act[c.slot] = True
                     st.last_token_at = now()
                     continue
-                first = int(nxt[0])
+                first = int(np.asarray(sync["finals"][ci])[0])
                 gen_budget = min(req.max_new_tokens, self.max_len - plen)
                 if first != EOS and gen_budget > 0:
                     st.emitted.append(first)
@@ -1216,6 +1272,7 @@ class InferenceEngine:
                     jnp.asarray(cow_src), jnp.asarray(cow_dst),
                     jnp.asarray(cow_keep), cache, rng)
                 nxt = np.asarray(jax.block_until_ready(nxt))
+            metrics.host_syncs += 1
             metrics.steps += 1
             metrics.slot_steps_total += slots
             metrics.slot_steps_active += len(plan.decode_slots)
@@ -1477,6 +1534,7 @@ class InferenceEngine:
                             jnp.asarray(slots_arr), jnp.asarray(rows),
                             jnp.asarray(pages_arr), cache, rng)
                     first = np.asarray(jax.block_until_ready(first))
+                metrics.host_syncs += 1
                 t_adm = now()
                 for i, (slot, st, _) in enumerate(chunk):
                     req = st.request
@@ -1596,8 +1654,7 @@ class InferenceEngine:
                     metrics.mixed_dispatches += len(plan.chunks)
                     if plan.decode_slots:
                         metrics.mixed_dispatches += 1
-                        decode_micro_step()
-                    padded = run_chunks(plan)
+                    padded = run_mixed(plan)
                     emit_iteration(
                         budget_used=int(plan.total_tokens),
                         decode_lanes=len(plan.decode_slots),
@@ -1629,6 +1686,7 @@ class InferenceEngine:
                         jnp.asarray(drafts), jnp.asarray(block_tables),
                         cache, rng)
                     emits = np.asarray(jax.block_until_ready(emits))
+                metrics.host_syncs += 1
                 metrics.steps += 1
                 metrics.slot_steps_total += slots
                 metrics.slot_steps_active += n_lanes
@@ -1644,6 +1702,7 @@ class InferenceEngine:
                                      jnp.asarray(block_tables), cache,
                                      rng)
                     emits = np.asarray(jax.block_until_ready(emits))
+                metrics.host_syncs += 1
                 acts = np.asarray(acts)
                 metrics.steps += steps_per_sync
                 metrics.slot_steps_total += slots * steps_per_sync

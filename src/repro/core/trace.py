@@ -159,6 +159,13 @@ EVENT_SCHEMAS = {
     "host_refused": {
         "bytes": (_INT, _REQUIRED),         # rejected put size
     },
+    # --- weight compression (emitted once, at serve start) -----------------
+    "weights": {
+        "dtype": (_STR, _REQUIRED),         # policy weights_dtype
+        "weight_bytes": (_INT, _REQUIRED),  # serve-path matmul weight bytes
+        "weight_bytes_dense": (_INT, _REQUIRED),   # same set, uncompressed
+        "quantized_tensors": (_INT, _REQUIRED),
+    },
 }
 
 
@@ -535,6 +542,10 @@ def to_perfetto_dict(events, dropped=0):
                 meta(tid, f"slot {slot}")
             args = {f: ev[f] for f in ev if f not in ("kind", "t")}
             instant(tid, k, t, args)
+        elif k == "weights":
+            counter("weight_bytes", t, ev.get("weight_bytes", 0))
+            args = {f: ev[f] for f in ev if f not in ("kind", "t")}
+            instant(_TID_SCHED, k, t, args)
         elif k in ("offload", "restore", "host_evict", "host_refused"):
             args = {f: ev[f] for f in ev if f not in ("kind", "t")}
             instant(_TID_HOST, k, t, args)

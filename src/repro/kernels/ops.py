@@ -136,6 +136,19 @@ def maybe_paged_packed_attention(q, kpool, vpool, ppos, block_tables,
                                      interpret=(_MODE == "interpret"))
 
 
+def maybe_quant_matmul(x, q, s):
+    """Weight-quantized matmul dispatch: x (..., K) float activations
+    against int8 codes q (K, N) + per-output-channel fp32 scales s (N,)
+    (see ``precision.quantize_weights``).  Returns fp32 (..., N), or
+    None -> caller falls back to ``ref.quant_matmul_ref``."""
+    if _MODE == "off":
+        return None
+    from repro.kernels import quant_matmul as QM
+    if not QM.shape_supported(x, q, s):
+        return None
+    return QM.quant_matmul(x, q, s, interpret=(_MODE == "interpret"))
+
+
 def maybe_rmsnorm(x, w):
     if _MODE == "off":
         return None

@@ -1,0 +1,122 @@
+"""Weight-quantized matmul Pallas TPU kernel: ``x @ W_q8`` with fused dequant.
+
+The serve path's dense matmuls (attention qkv/out, dense FFN, unembed)
+are weight-bound during autoregressive decode: each step streams the
+whole weight matrix from HBM for a handful of activation rows.  Storing
+weights as int8 codes + per-output-channel fp32 absmax scales
+(``precision.quantize_weights``) halves that traffic; this kernel keeps
+the halving all the way into the MXU by loading the int8 tile directly
+and folding dequantization into the accumulation epilogue.
+
+Per-*column* scales make the rescale exact:
+
+    x @ (q * s)  ==  (x @ q) * s        (column by column)
+
+so the kernel accumulates ``x_f32 @ q_f32`` tiles in a VMEM fp32 scratch
+over the K grid dimension and multiplies by the (1, bn) scale tile once,
+on the last K step — one multiply per output element instead of one per
+weight element, and no dequantized weight copy ever materializes.
+
+  grid = (M/bm, N/bn, K/bk)      (k innermost, sequential)
+
+The public wrapper zero-pads every dimension up to tile multiples (K
+padding contributes exact zero products; M/N padding is sliced off), so
+arbitrary shapes — non-multiple d_model, odd token counts, small vocabs
+— all lower to the same aligned kernel.  Math matches
+``ref.quant_matmul_ref`` to fp32 accumulation-order tolerance.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# int8 operands need (32, 128) tiles on the sublane/lane axes; fp32
+# needs (8, 128).  bm=32/bk=128/bn=128 satisfies every operand: x tile
+# (bm, bk) fp32, q tile (bk, bn) int8, out tile (bm, bn) fp32.
+BLOCK_M = 32
+BLOCK_K = 128
+BLOCK_N = 128
+
+# Guard against pathological padding blowup: a (1, K) decode activation
+# against a huge weight is fine (M pads 1 -> 32), but refuse shapes the
+# pad-to-tile wrapper would inflate by more than this factor in FLOPs.
+MAX_PAD_RATIO = 64.0
+
+
+def shape_supported(x, q, s) -> bool:
+    """x (..., K) fp, q (K, N) int8, s (N,) fp32 — the per-repeat slice
+    layout every serve-path call site produces (scan slices stacked
+    weights down to 2-D)."""
+    if q.ndim != 2 or s.ndim != 1 or x.ndim < 2:
+        return False
+    K, N = q.shape
+    if x.shape[-1] != K or s.shape[0] != N or q.dtype != jnp.int8:
+        return False
+    M = 1
+    for d in x.shape[:-1]:
+        M *= d
+    if M == 0 or K == 0 or N == 0:
+        return False
+    mp = -(-M // BLOCK_M) * BLOCK_M
+    kp = -(-K // BLOCK_K) * BLOCK_K
+    np_ = -(-N // BLOCK_N) * BLOCK_N
+    return (mp * kp * np_) <= MAX_PAD_RATIO * (M * K * N)
+
+
+def _kernel(x_ref, q_ref, s_ref, o_ref, acc_ref, *, n_k):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # int8 codes dequantize in-register: widened to fp32 on the load
+    # path, scaled once in the epilogue (per-column identity above)
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...].astype(jnp.float32), q_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ik == n_k - 1)
+    def _finish():
+        o_ref[...] = acc_ref[...] * s_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quant_matmul(x, q, s, *, interpret: bool = False):
+    """``x @ (q * s)`` in fp32: x (..., K) any float dtype, q (K, N)
+    int8 codes, s (N,) fp32 per-output-channel scales.  Returns
+    (..., N) fp32 (callers cast back to their compute dtype)."""
+    lead = x.shape[:-1]
+    K, N = q.shape
+    xm = x.reshape(-1, K).astype(jnp.float32)
+    M = xm.shape[0]
+    mp = -(-M // BLOCK_M) * BLOCK_M
+    kp = -(-K // BLOCK_K) * BLOCK_K
+    np_ = -(-N // BLOCK_N) * BLOCK_N
+    if (mp, kp) != (M, K):
+        xm = jnp.pad(xm, ((0, mp - M), (0, kp - K)))
+    if (kp, np_) != (K, N):
+        q = jnp.pad(q, ((0, kp - K), (0, np_ - N)))
+    s2 = s.astype(jnp.float32).reshape(1, N)
+    if np_ != N:
+        s2 = jnp.pad(s2, ((0, 0), (0, np_ - N)))
+    n_k = kp // BLOCK_K
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid=(mp // BLOCK_M, np_ // BLOCK_N, n_k),
+        in_specs=[
+            pl.BlockSpec((BLOCK_M, BLOCK_K), lambda i, j, k: (i, k)),
+            pl.BlockSpec((BLOCK_K, BLOCK_N), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, BLOCK_N), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_M, BLOCK_N), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((BLOCK_M, BLOCK_N), jnp.float32)],
+        interpret=interpret,
+    )(xm, q, s2)
+    return out[:M, :N].reshape(lead + (N,))

@@ -124,3 +124,15 @@ def rmsnorm_ref(x, w, eps: float = 1e-6):
     var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
     return (xf * jax.lax.rsqrt(var + eps)
             * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def quant_matmul_ref(x, q, s):
+    """Weight-quantized matmul oracle: x (..., K) @ int8 q (K, N) with
+    per-output-channel fp32 scales s (N,).  Accumulates the codes in
+    fp32 and rescales the product — the exact per-column identity
+    ``x @ (q * s) == (x @ q) * s`` the fused kernel exploits.  Returns
+    fp32; this is also the serve path's jnp fallback (kernel mode off),
+    so CPU tier-1 runs the same math the kernel computes."""
+    acc = jnp.matmul(x.astype(jnp.float32), q.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    return acc * s.astype(jnp.float32)

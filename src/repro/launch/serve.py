@@ -41,6 +41,15 @@ def main():
                          "pages + per-entry scales, halving KV bytes per "
                          "token (dense-state layer families keep full "
                          "precision)")
+    ap.add_argument("--weights-dtype", default="auto",
+                    choices=["auto", "bf16", "fp16", "int8"],
+                    help="serve-path weight storage dtype: auto = compute "
+                         "dtype; int8 quantizes dense matmul weights "
+                         "(attention qkv/out, dense FFN, unembed) to int8 "
+                         "codes + per-output-channel scales at load, "
+                         "roughly halving bf16 weight bytes read per "
+                         "decode step (fused-dequant Pallas matmul on "
+                         "TPU; exact jnp fallback elsewhere)")
     ap.add_argument("--no-kv-cache", action="store_true",
                     help="paper baseline mode")
     ap.add_argument("--no-pipeline", action="store_true")
@@ -146,6 +155,9 @@ def main():
     policy = get_policy(args.policy)
     if args.kv_dtype != "auto":
         policy = dataclasses.replace(policy, kv_dtype=args.kv_dtype)
+    if args.weights_dtype != "auto":
+        policy = dataclasses.replace(policy,
+                                     weights_dtype=args.weights_dtype)
     params = T.init_params(jax.random.PRNGKey(0), cfg, policy)
 
     corpus = synthetic_corpus(600)
@@ -245,6 +257,10 @@ def main():
             "kv_dtype": metrics.kv_dtype,
             "kv_pool_bytes": metrics.kv_pool_bytes,
             "kv_bytes_per_token": round(metrics.kv_bytes_per_token, 1),
+            "weight_dtype": metrics.weight_dtype,
+            "weight_bytes": metrics.weight_bytes,
+            "weight_bytes_saved": metrics.weight_bytes_saved,
+            "host_syncs": metrics.host_syncs,
             "peak_pages_in_use": metrics.peak_pages_in_use,
             "admission_stalls": metrics.admission_stalls,
             "preemptions": metrics.preemptions,

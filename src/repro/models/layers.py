@@ -31,6 +31,33 @@ def embed_init(rng, vocab: int, dim: int, dtype=jnp.float32):
 
 
 # ---------------------------------------------------------------------------
+# Dense matmul (weight-quantization aware)
+# ---------------------------------------------------------------------------
+
+
+def dense_matmul(x, w):
+    """``x @ w`` for a serve-path dense weight.
+
+    ``w`` is either a plain (..., in, out) array — cast to ``x.dtype``
+    at point of use, the historical path — or an int8 weight record
+    ``{"q": int8, "s": fp32}`` produced by ``precision.quantize_weights``
+    (per-output-channel absmax; ``lax.scan`` over stacked weights slices
+    the record's arrays per repeat, so call sites see 2-D codes).
+    Quantized records dispatch to the fused-dequant Pallas kernel and
+    fall back to the jnp oracle (identical math, fp32 accumulate-then-
+    scale) when kernels are off/unsupported — CPU tier-1 stays exact.
+    """
+    if not isinstance(w, dict):
+        return x @ w.astype(x.dtype)
+    from repro.kernels import ops as kops
+    out = kops.maybe_quant_matmul(x, w["q"], w["s"])
+    if out is None:
+        from repro.kernels import ref as kref
+        out = kref.quant_matmul_ref(x, w["q"], w["s"])
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
 # Norms
 # ---------------------------------------------------------------------------
 
@@ -343,9 +370,9 @@ def attn_qkv(cfg: ModelConfig, p, x, positions, theta: Optional[float] = None):
     B, S, _ = x.shape
     theta = theta if theta is not None else cfg.rope_theta
     hd = cfg.resolved_head_dim
-    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, cfg.num_heads, hd)
-    k = (x @ p["wk"].astype(x.dtype)).reshape(B, S, cfg.num_kv_heads, hd)
-    v = (x @ p["wv"].astype(x.dtype)).reshape(B, S, cfg.num_kv_heads, hd)
+    q = dense_matmul(x, p["wq"]).reshape(B, S, cfg.num_heads, hd)
+    k = dense_matmul(x, p["wk"]).reshape(B, S, cfg.num_kv_heads, hd)
+    v = dense_matmul(x, p["wv"]).reshape(B, S, cfg.num_kv_heads, hd)
     if cfg.qk_norm:
         q = rmsnorm(q, p["q_norm"]["w"])
         k = rmsnorm(k, p["k_norm"]["w"])
@@ -357,7 +384,7 @@ def attn_qkv(cfg: ModelConfig, p, x, positions, theta: Optional[float] = None):
 
 def attn_out(cfg: ModelConfig, p, ctx):
     B, S = ctx.shape[:2]
-    return ctx.reshape(B, S, -1) @ p["wo"].astype(ctx.dtype)
+    return dense_matmul(ctx.reshape(B, S, -1), p["wo"])
 
 
 def attn_scale(cfg: ModelConfig) -> float:
@@ -381,14 +408,14 @@ def ffn_init(rng, cfg: ModelConfig, width: Optional[int] = None):
 
 
 def ffn_apply(cfg: ModelConfig, p, x):
-    h = x @ p["wi"].astype(x.dtype)
+    h = dense_matmul(x, p["wi"])
     if cfg.activation == "swiglu":
-        h = jax.nn.silu(x @ p["wg"].astype(x.dtype)) * h
+        h = jax.nn.silu(dense_matmul(x, p["wg"])) * h
     elif cfg.activation == "geglu":
-        h = jax.nn.gelu(x @ p["wg"].astype(x.dtype), approximate=True) * h
+        h = jax.nn.gelu(dense_matmul(x, p["wg"]), approximate=True) * h
     else:
         h = jax.nn.gelu(h, approximate=True)
-    return h @ p["wo"].astype(x.dtype)
+    return dense_matmul(h, p["wo"])
 
 
 # ---------------------------------------------------------------------------
@@ -420,10 +447,19 @@ def unembed(cfg: ModelConfig, params, x):
             heads = params["embed"]["tokens"]       # tied: (C,V,d)
         logits = jnp.einsum("bsd,cvd->bscv", xf, heads.astype(jnp.float32))
     else:
-        head = (params["embed"]["tokens"] if cfg.tie_embeddings
-                else params["embed"]["head"])
-        logits = xf @ head.astype(jnp.float32).T if cfg.tie_embeddings \
-            else xf @ head.astype(jnp.float32)
+        embed = params["embed"]
+        if cfg.tie_embeddings:
+            # tied models unembed through the int8 copy of the (d, V)
+            # transposed gather table when the policy quantized one
+            # (precision.compress_weights); the gather table itself is
+            # never quantized, so embedding lookups stay exact
+            head_q8 = embed.get("head_q8")
+            if head_q8 is not None:
+                logits = dense_matmul(xf, head_q8)
+            else:
+                logits = xf @ embed["tokens"].astype(jnp.float32).T
+        else:
+            logits = dense_matmul(xf, embed["head"])
     return softcap(logits, cfg.final_softcap)
 
 
